@@ -1,0 +1,52 @@
+"""Paper Fig 10: failure-free overhead of the FT layer itself.
+
+The paper compares raw MVAPICH2 at 4096 procs against FTHP-MPI at 8192
+(4096 + 4096 replicas) with no failures: the replicas do the same useful
+work, so any loss is interception + replica-communication overhead
+(paper: 1.3%).
+
+Here (real wall-clock measurement): the SAME jitted LM train step, warm,
+driven (a) by a bare Python loop and (b) by FTTrainer with the full FT
+machinery active (coordinators, failure polling, replica-map bookkeeping,
+deterministic data cursor) but no failures, no checkpoints, and the
+replica slice's redundant compute excluded on both sides — exactly the
+paper's accounting, which charges redundancy to the 50% efficiency factor,
+not to the library."""
+import time
+
+from repro.configs.base import FTConfig
+from repro.launch.train import build_trainer
+
+
+def run() -> list:
+    t0 = time.perf_counter()
+    steps, warm = 40, 6
+    tr = build_trainer("codeqwen1.5-7b", reduced=True, batch=4, seq=64,
+                       ft=FTConfig(mode="replication"), kill_schedule={})
+    tr.simulate_replica = False          # redundancy excluded (see above)
+
+    # warm the jit cache on the exact step fn both paths share
+    state = tr.init_state()
+    for i in range(warm):
+        state, _ = tr.train_step(state, tr.batch_fn(i))
+
+    def bare():
+        s = tr.init_state()
+        t = time.perf_counter()
+        for i in range(steps):
+            s, _ = tr.train_step(s, tr.batch_fn(i))
+        return time.perf_counter() - t
+
+    def ft():
+        t = time.perf_counter()
+        tr.run(steps)
+        return time.perf_counter() - t
+
+    bare_s = min(bare() for _ in range(3))
+    ft_s = min(ft() for _ in range(3))
+    overhead = (ft_s - bare_s) / bare_s * 100
+    us = (time.perf_counter() - t0) * 1e6
+    return [("fig10/failure_free_overhead", us,
+             f"overhead={overhead:+.2f}% (paper: 1.3%) "
+             f"bare={bare_s / steps * 1e3:.1f}ms/step "
+             f"ft={ft_s / steps * 1e3:.1f}ms/step")]

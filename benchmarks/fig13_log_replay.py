@@ -1,0 +1,52 @@
+"""Paper Fig 13: HPCG under log-based (Tsubame-3-style) node failures,
+time-scaled to MTBF ~2308 s. Node-level events kill whole worker groups;
+repeated node names hit the same workers; pair-death statistics follow the
+real 8192-proc/171-node scale. Expected shape (paper): replication still
+beats checkpointing, but checkpointing is more competitive than under
+Weibull failures (bursty, spiky node failures favour it)."""
+import time
+
+from benchmarks.common import (N_RANKS, run_calibrated, scaled_node_events)
+from repro.core.failure_sim import LogReplayInjector, synth_tsubame_log
+
+
+def run() -> list:
+    rows = []
+    t0 = time.perf_counter()
+    procs, mu, c = 8192, 2308.0, 215.0
+    log = synth_tsubame_log(n_nodes=256, n_events=400,
+                            mtbf_target_s=2308.0, seed=13)
+
+    import numpy as np
+    cks, rps = [], []
+    for seed in range(5):
+        ck_inj = LogReplayInjector(log, workers_per_node=2,
+                                   n_workers=N_RANKS, time_scale=1.0)
+        cks.append(run_calibrated("HPCG", procs, mu, c, "checkpoint",
+                                  seed=seed, injector=ck_inj))
+        rp_ev = scaled_node_events(log, procs, N_RANKS, seed=seed)
+
+        class _Fixed:
+            def __init__(self, ev):
+                self.ev = ev
+
+            def schedule(self, horizon, alive_workers=None):
+                return [e for e in self.ev if e.time_s < horizon]
+
+        rps.append(run_calibrated("HPCG", procs, mu, c, "replication",
+                                  seed=seed, injector=_Fixed(rp_ev)))
+    eff_ck = float(np.mean([p.efficiency for p in cks]))
+    eff_rp = float(np.mean([p.efficiency for p in rps]))
+    gain = (eff_rp - eff_ck) / eff_ck * 100
+    us = (time.perf_counter() - t0) * 1e6 / 3
+    return [
+        ("fig13/log_ckpt_8192", us,
+         f"eff={eff_ck:.3f} failures~{cks[0].failures} "
+         f"restarts~{cks[0].restarts}"),
+        ("fig13/log_repl_8192", us,
+         f"eff={eff_rp:.3f} promotions~{rps[0].promotions} "
+         f"pair_death_restarts={sum(p.restarts for p in rps)}/5seeds"),
+        ("fig13/log_gain", us,
+         f"replication {gain:+.1f}% vs ckpt under log-based failures "
+         f"(paper: positive, tighter than the Weibull +18.2%)"),
+    ]

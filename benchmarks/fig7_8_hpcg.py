@@ -1,0 +1,34 @@
+"""Paper Figs 7+8: HPCG performance and efficiency, checkpointing vs full
+replication, scaling 1024 -> 8192 cores (MTBF halves per doubling).
+
+Real failure mechanics on the simulation runtime; costs from Table 1.
+Performance proxy = procs x machine-efficiency (the paper's FLOPS scale
+linearly in cores x efficiency)."""
+import time
+
+from benchmarks.common import TABLE1, run_avg
+
+
+def run() -> list:
+    rows = []
+    t0 = time.perf_counter()
+    summary = {}
+    for procs, mu, c in TABLE1["HPCG"]:
+        ck = run_avg("HPCG", procs, mu, c, "checkpoint", seeds=(0,1,2,3,4))
+        rp = run_avg("HPCG", procs, mu, c, "replication", seeds=(0,1,2,3,4))
+        perf_ck = procs * ck.efficiency
+        perf_rp = procs * rp.efficiency
+        summary[procs] = (perf_ck, perf_rp)
+        rows.append((f"fig7_8/hpcg_{procs}_ckpt", ck.efficiency,
+                     f"perf={perf_ck:.0f} failures={ck.failures} "
+                     f"restarts={ck.restarts}"))
+        rows.append((f"fig7_8/hpcg_{procs}_repl", rp.efficiency,
+                     f"perf={perf_rp:.0f} failures={rp.failures} "
+                     f"promotions={rp.promotions}"))
+    pc, pr = summary[8192]
+    gain = (pr - pc) / pc * 100
+    rows.append(("fig7_8/crossover_8192", gain,
+                 f"replication {'+' if gain > 0 else ''}{gain:.1f}% vs ckpt "
+                 f"(paper: +18.18%)"))
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    return [(n, us, f"eff_or_gain={v:.3f} {d}") for n, v, d in rows]

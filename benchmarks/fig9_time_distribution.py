@@ -1,0 +1,27 @@
+"""Paper Fig 9: where the time goes — useful work vs checkpoint create /
+restore / rollback / repair / log removal, checkpointing vs replication."""
+import time
+
+from benchmarks.common import TABLE1, run_avg
+
+
+def run() -> list:
+    rows = []
+    t0 = time.perf_counter()
+    for procs, mu, c in TABLE1["HPCG"][1:]:
+        for mode in ("checkpoint", "replication"):
+            p = run_avg("HPCG", procs, mu, c, mode, seeds=(5,6,7))
+            b = p.breakdown
+            tot = b["total"]
+            comp = {k: 100.0 * v / tot for k, v in b.items() if k != "total"}
+            useful_pct = comp["useful"]
+            if mode == "replication":
+                # half of 'useful' machine-seconds are redundant (paper
+                # plots useful vs redundant separately)
+                comp["redundant"] = useful_pct / 2
+                comp["useful"] = useful_pct / 2
+            detail = " ".join(f"{k}={v:.1f}%" for k, v in comp.items()
+                              if v > 0.05)
+            rows.append((f"fig9/{mode}_{procs}", comp["useful"], detail))
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    return [(n, us, f"useful={v:.1f}% | {d}") for n, v, d in rows]

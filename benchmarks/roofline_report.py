@@ -1,0 +1,86 @@
+"""Roofline report: merge the dry-run JSONs into the per-cell table
+(EXPERIMENTS.md section Roofline) and pick the hillclimb cells."""
+import glob
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load_cells(pattern="dryrun_*.json", include_final=True):
+    cells = {}
+    paths = sorted(glob.glob(os.path.join(RESULTS_DIR, pattern)))
+    if include_final:
+        # optimized-sweep results override the preserved baseline sweep
+        paths += sorted(glob.glob(os.path.join(RESULTS_DIR, "final", pattern)))
+    for path in paths:
+        try:
+            data = json.load(open(path))
+        except Exception:
+            continue
+        for r in data:
+            if r.get("ok"):
+                t = r["terms"]
+                key = (t["arch"], t["shape"], t["mesh"])
+                cells[key] = r        # later files override (post-fix runs)
+    return cells
+
+
+def markdown_table(cells, mesh="16x16") -> str:
+    hdr = ("| arch | shape | comp(s) | mem(s) | coll(s) | dominant | "
+           "useful | roofline-frac |\n|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for (arch, shape, m), r in sorted(cells.items()):
+        if m != mesh:
+            continue
+        t = r["terms"]
+        lines.append(
+            f"| {arch} | {shape} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{t['dominant']} | {t['useful_ratio']:.2f} | "
+            f"{t['roofline_fraction']:.4f} |")
+    return hdr + "\n".join(lines)
+
+
+def pick_hillclimb_cells(cells):
+    """worst roofline fraction / most collective-bound / most FT-relevant."""
+    singles = {k: v for k, v in cells.items() if k[2] == "16x16"}
+
+    def frac(r):
+        return r["terms"]["roofline_fraction"]
+
+    trains = {k: v for k, v in singles.items() if k[1] == "train_4k"}
+    worst = min(trains.items(), key=lambda kv: frac(kv[1]))
+    coll = max(singles.items(),
+               key=lambda kv: kv[1]["terms"]["collective_s"])
+    # most representative of the paper's technique: the gradient-allreduce
+    # train step of the biggest dense model (replication wraps train_step)
+    rep = singles.get(("qwen1.5-110b", "train_4k", "16x16"))
+    return {"worst_fraction": worst[0], "most_collective": coll[0],
+            "paper_representative": ("qwen1.5-110b", "train_4k", "16x16")}
+
+
+def run() -> list:
+    t0 = time.perf_counter()
+    cells = load_cells()
+    singles = [v for (a, s, m), v in cells.items() if m == "16x16"]
+    multis = [v for (a, s, m), v in cells.items() if m == "2x16x16"]
+    if not cells:
+        return [("roofline/missing", 0.0,
+                 "no dry-run JSONs found — run repro.launch.dryrun first")]
+    md = markdown_table(cells)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "roofline_single.md"), "w") as f:
+        f.write(md + "\n")
+    picks = pick_hillclimb_cells(cells)
+    us = (time.perf_counter() - t0) * 1e6
+    rows = [("roofline/cells_single", us, f"{len(singles)} cells compiled"),
+            ("roofline/cells_multi", us, f"{len(multis)} cells compiled")]
+    for why, key in picks.items():
+        rows.append((f"roofline/hillclimb_{why}", us, ":".join(key[:2])))
+    doms = {}
+    for v in singles:
+        doms[v["terms"]["dominant"]] = doms.get(v["terms"]["dominant"], 0) + 1
+    rows.append(("roofline/dominant_histogram", us, str(doms)))
+    return rows

@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (the repo contract)."""
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig7_8_hpcg, fig9_time_distribution,
+                            fig10_overhead, fig11_12_apps, fig13_log_replay,
+                            roofline_report, table1_intervals)
+    modules = [table1_intervals, fig7_8_hpcg, fig9_time_distribution,
+               fig10_overhead, fig11_12_apps, fig13_log_replay,
+               roofline_report]
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in modules:
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{mod.__name__},0,ERROR {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+            continue
+        for name, us, derived in rows:
+            print(f'{name},{us:.1f},"{derived}"')
+        sys.stdout.flush()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

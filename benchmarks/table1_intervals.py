@@ -1,0 +1,29 @@
+"""Paper Table 1: Young-Daly optimal checkpoint intervals — exact
+reproduction from (MTBF, C)."""
+import time
+
+from repro.core.ckpt_policy import young_daly_interval
+
+from benchmarks.common import TABLE1
+
+PAPER = {("HPCG", 1024): 1213.26, ("HPCG", 2048): 1019.80,
+         ("HPCG", 4096): 954.98, ("HPCG", 8192): 927.36,
+         ("CloverLeaf", 2048): 419.52, ("CloverLeaf", 4096): 300.00,
+         ("CloverLeaf", 8192): 204.93, ("PIC", 2048): 513.81,
+         ("PIC", 4096): 354.96, ("PIC", 8192): 244.94}
+
+
+def run() -> list:
+    rows = []
+    t0 = time.perf_counter()
+    for app, ladder in TABLE1.items():
+        for procs, mu, c in ladder:
+            tau = young_daly_interval(mu, c)
+            paper = PAPER[(app, procs)]
+            err = abs(tau - paper) / paper
+            assert err < 1e-3, (app, procs, tau, paper)
+            rows.append((f"table1/{app.lower()}_{procs}", tau,
+                         f"paper={paper:.2f}s err={err * 100:.3f}%"))
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    return [(n, us, d) for n, _, d in [(r[0], 0, r[2]) for r in rows]] and \
+        [(r[0], us, r[2]) for r in rows]

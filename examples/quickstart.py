@@ -1,0 +1,56 @@
+"""Quickstart: the paper's headline mechanism in 60 lines.
+
+Runs HPCG (conjugate gradient, the paper's main benchmark) on the simulation
+runtime three ways and prints the outcome:
+  1. failure-free baseline,
+  2. pure checkpoint/restart under injected failures (rollback cost),
+  3. pure replication under the same failures (promotion, no rollback),
+and verifies all three produce the SAME residual — the paper's claim that
+replication-based fault tolerance is transparent to the application.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+from repro.apps.hpcg import HPCG
+from repro.configs.base import FTConfig
+from repro.core.failure_sim import FailureEvent
+from repro.simrt import CostModel, SimRuntime
+
+N_RANKS, STEPS = 4, 25
+COSTS = CostModel(step_time_s=1.0, ckpt_cost_s=0.4, restore_cost_s=0.6)
+FAILS = [FailureEvent(6.5, (1,)), FailureEvent(13.2, (2,)),
+         FailureEvent(19.7, (0,))]
+
+
+def run(mode, events):
+    app = HPCG(n_ranks=N_RANKS, nx=16, ny=16, nz=8)
+    ft = FTConfig(mode=mode, replication_degree=1.0, mtbf_s=1e9,
+                  ckpt_interval_s=6.0)
+    with tempfile.TemporaryDirectory() as d:
+        rt = SimRuntime(app, ft, costs=COSTS, ckpt_dir=d,
+                        failure_events=list(events), workers_per_node=2)
+        return rt.run(STEPS)
+
+
+base = run("none", [])
+ck = run("checkpoint", FAILS)
+rp = run("replication", FAILS)
+
+print(f"{'mode':14s} {'residual':>14s} {'time(s)':>8s} {'useful':>7s} "
+      f"{'ckpt':>5s} {'rollbk':>6s} {'restarts':>8s} {'promos':>6s}")
+for name, r in [("failure-free", base), ("checkpoint", ck),
+                ("replication", rp)]:
+    t = r.time
+    print(f"{name:14s} {r.check_value:14.9f} {t.total:8.1f} {t.useful:7.1f} "
+          f"{t.ckpt_write:5.1f} {t.rollback:6.1f} {r.restarts:8d} "
+          f"{r.promotions:6d}")
+
+assert abs(ck.check_value - base.check_value) < 1e-12, "ckpt diverged!"
+assert abs(rp.check_value - base.check_value) < 1e-12, "replication diverged!"
+print("\nAll three runs converge to the SAME residual (bitwise).")
+print(f"Replication paid {rp.time.rollback:.1f}s rollback vs checkpoint's "
+      f"{ck.time.rollback:.1f}s — the paper's core result in miniature.")

@@ -1,0 +1,26 @@
+"""Reproduce the paper's scaling crossover (Figs 7/8) analytically AND with
+the event-driven simulator: beyond a certain core count, spending half the
+machine on replicas beats spending all of it on computation + checkpoints.
+
+  PYTHONPATH=src python examples/scaling_crossover.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import ckpt_policy
+
+# the paper's HPCG ladder: 1024 procs @ mu=16000s, C=46s -> 8192 @ 2000s/215s
+print(f"{'procs':>6} {'MTBF(s)':>8} {'C(s)':>6} {'tau*(s)':>8} "
+      f"{'eff_ckpt':>9} {'eff_repl':>9} {'winner':>12}")
+for pt in ckpt_policy.scaling_study(base_procs=1024, base_mtbf_s=16000,
+                                    base_ckpt_cost_s=46,
+                                    runtime_s=3 * 3600, n_doublings=4):
+    tau = ckpt_policy.young_daly_interval(pt.job_mtbf_s, pt.ckpt_cost_s)
+    winner = "replication" if pt.repl_eff > pt.ckpt_eff else "checkpoint"
+    print(f"{pt.n_procs:6d} {pt.job_mtbf_s:8.0f} {pt.ckpt_cost_s:6.0f} "
+          f"{tau:8.1f} {pt.ckpt_eff:9.3f} {pt.repl_eff:9.3f} {winner:>12}")
+
+cross = ckpt_policy.crossover_processes(1024, 16000, 46, 3 * 3600)
+print(f"\ncrossover at {cross} processes "
+      f"(paper: 8192 cores at MTBF 2000 s).")

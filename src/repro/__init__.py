@@ -1,0 +1,14 @@
+"""FTHP-JAX: replication-based fault tolerance for a fault-intolerant
+native runtime (XLA/JAX), after Joshi & Vadhiyar, "FTHP-MPI" (2025).
+
+Layers:
+  repro.core        - the paper's contribution (replication + ckpt/restart FT)
+  repro.models      - all 10 assigned architectures
+  repro.kernels     - Pallas TPU kernels (flash attention, rmsnorm, mamba scan)
+  repro.distributed - sharding rules, replica-aware collectives
+  repro.simrt       - multi-worker failure-injection runtime (CPU, real numerics)
+  repro.apps        - HPCG / CloverLeaf / PIC reproductions
+  repro.launch      - production mesh, dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+"""Paper applications (HPCG / CloverLeaf / PIC) + LM training on simrt."""

@@ -1,0 +1,86 @@
+"""HPCG analogue: conjugate gradient on a 3-D 7-point Laplacian.
+
+Weak-scaling layout identical to HPCG's: each rank owns an (nx, ny, nz)
+sub-grid stacked along z; SpMV needs one halo plane from each z-neighbour
+(point-to-point exchange) and CG needs two dot products per iteration
+(allreduce) — the same communication skeleton the paper's HPCG runs
+exercised. One app step = one CG iteration.
+
+All arithmetic is float64 numpy with a fixed operation order, so runs are
+bit-reproducible — the FT theorem test (failures vs failure-free give the
+same answer) compares exactly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+TAG_HALO = 1
+
+
+class HPCG:
+    def __init__(self, n_ranks: int, nx: int = 16, ny: int = 16,
+                 nz: int = 8, seed: int = 1):
+        self.n_ranks = n_ranks
+        self.nx, self.ny, self.nz = nx, ny, nz
+        self.seed = seed
+
+    def init_state(self, rank: int) -> dict:
+        rng = np.random.default_rng(self.seed + rank)
+        shape = (self.nx, self.ny, self.nz)
+        b = rng.standard_normal(shape)
+        x = np.zeros(shape)
+        return {"b": b, "x": x, "r": b.copy(), "p": b.copy(),
+                "rr": None, "iters": 0}
+
+    # -- operator ------------------------------------------------------------
+
+    def _spmv(self, rank, p, lo_halo, hi_halo):
+        """7-point Laplacian with Dirichlet walls in x, y and rank-boundary
+        halos in z."""
+        q = 6.0 * p
+        q[1:, :, :] -= p[:-1, :, :]
+        q[:-1, :, :] -= p[1:, :, :]
+        q[:, 1:, :] -= p[:, :-1, :]
+        q[:, :-1, :] -= p[:, 1:, :]
+        q[:, :, 1:] -= p[:, :, :-1]
+        q[:, :, :-1] -= p[:, :, 1:]
+        if lo_halo is not None:
+            q[:, :, 0] -= lo_halo
+        if hi_halo is not None:
+            q[:, :, -1] -= hi_halo
+        return q
+
+    def step(self, rank, state, step_idx):
+        n = self.n_ranks
+        p = state["p"]
+        # halo exchange of boundary z-planes with neighbours
+        out = {}
+        if rank > 0:
+            out[rank - 1] = p[:, :, 0].copy()
+        if rank < n - 1:
+            out[rank + 1] = p[:, :, -1].copy()
+        halos = {}
+        if out:
+            halos = yield ("exchange", out, TAG_HALO)
+        lo = halos.get(rank - 1) if rank > 0 else None
+        hi = halos.get(rank + 1) if rank < n - 1 else None
+
+        q = self._spmv(rank, p, lo, hi)
+        rr = state["rr"]
+        if rr is None:
+            rr = yield ("allreduce", np.dot(state["r"].ravel(),
+                                            state["r"].ravel()), "sum")
+        pq = yield ("allreduce", np.dot(p.ravel(), q.ravel()), "sum")
+        alpha = rr / pq if pq != 0 else 0.0
+        x = state["x"] + alpha * p
+        r = state["r"] - alpha * q
+        rr_new = yield ("allreduce", np.dot(r.ravel(), r.ravel()), "sum")
+        beta = rr_new / rr if rr != 0 else 0.0
+        p_new = r + beta * p
+        return {"b": state["b"], "x": x, "r": r, "p": p_new,
+                "rr": rr_new, "iters": state["iters"] + 1}
+
+    def check(self, states) -> float:
+        """Global residual norm (the verification scalar)."""
+        return float(np.sqrt(sum(np.dot(s["r"].ravel(), s["r"].ravel())
+                                 for s in states.values())))

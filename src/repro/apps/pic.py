@@ -1,0 +1,120 @@
+"""PIC analogue of Decyk's skeleton codes: 1-D decomposed electrostatic
+particle-in-cell.
+
+Per step (the classic PIC loop the paper ran):
+  1. deposit  - scatter particle charge onto the local grid,
+  2. guard-cell exchange - halo sums with both neighbours (point-to-point),
+  3. field solve - global FFT-free Poisson solve via parallel cumulative
+     sums (allreduce) on the 1-D mean field,
+  4. push     - gather E at particle positions, advance velocities/positions,
+  5. migrate  - particles crossing slab boundaries are SENT to the owning
+     neighbour (variable-size payloads — the interesting case for
+     sender-based message logging and replay).
+
+Migration uses wildcard receives (`recv_any`) so the MPI_ANY_SOURCE
+ordering machinery (cmp picks, replica follows) is exercised too.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+TAG_GUARD = 3
+TAG_MIG = 4
+
+
+class PIC:
+    def __init__(self, n_ranks: int, cells_per_rank: int = 64,
+                 particles_per_rank: int = 512, seed: int = 3):
+        self.n_ranks = n_ranks
+        self.nc = cells_per_rank
+        self.np_ = particles_per_rank
+        self.seed = seed
+        self.L = n_ranks * cells_per_rank      # global domain length
+
+    def init_state(self, rank: int) -> dict:
+        rng = np.random.default_rng(self.seed + 17 * rank)
+        lo = rank * self.nc
+        pos = lo + rng.random(self.np_) * self.nc
+        vel = rng.standard_normal(self.np_) * 0.5
+        return {"pos": pos, "vel": vel, "t": 0.0}
+
+    def step(self, rank, state, step_idx):
+        n = self.n_ranks
+        nc, L = self.nc, self.L
+        lo = rank * nc
+        pos, vel = state["pos"], state["vel"]
+
+        # 1. deposit (linear weighting onto local grid + one guard cell/side)
+        rho = np.zeros(nc + 2)                   # [guard_lo, cells..., guard_hi]
+        x = pos - lo                             # local coords in [0, nc)
+        cell = np.floor(x).astype(np.int64)
+        frac = x - cell
+        np.add.at(rho, cell + 1, 1.0 - frac)
+        np.add.at(rho, cell + 2, frac)
+
+        # 2. guard-cell exchange (sum halo contributions with neighbours)
+        left = (rank - 1) % n
+        right = (rank + 1) % n
+        out = {}
+        if n > 1:
+            send_l = np.array([rho[0]])
+            send_r = np.array([rho[nc + 1]])
+            if left == right:                    # n == 2: one neighbour
+                out[left] = np.concatenate([send_l, send_r])
+                got = yield ("exchange", out, TAG_GUARD)
+                rho[nc] += got[left][0]
+                rho[1] += got[left][1]
+            else:
+                out[left] = send_l
+                out[right] = send_r
+                got = yield ("exchange", out, TAG_GUARD)
+                rho[1] += got[left][0]
+                rho[nc] += got[right][0]
+        rho_local = rho[1:nc + 1] - (len(pos) / nc)   # neutralizing background
+
+        # 3. 1-D Poisson: E(x) = cumulative charge - global mean line charge
+        local_q = np.float64(rho_local.sum())
+        prefix = np.zeros(1)
+        # exclusive prefix over ranks via allreduce of masked contributions
+        mine = np.zeros(n)
+        mine[rank] = local_q
+        allq = yield ("allreduce", mine, "sum")
+        prefix = allq[:rank].sum()
+        e_field = prefix + np.cumsum(rho_local) - rho_local * 0.5
+        total = allq.sum()
+        e_field = e_field - total * (lo + np.arange(nc) + 0.5) / L
+
+        # 4. push (leapfrog, gather E at particle positions)
+        eg = e_field[np.minimum(cell, nc - 1)]
+        vel = vel - 0.05 * eg
+        pos = pos + 0.1 * vel
+        pos = np.mod(pos, L)                       # periodic domain
+
+        # 5. migrate: ship particles that left the slab to their new owner
+        owner = np.floor(pos / nc).astype(np.int64) % n
+        stay = owner == rank
+        if n > 1:
+            for nbr in sorted({left, right}):
+                sel = owner == nbr
+                payload = np.stack([pos[sel], vel[sel]])
+                yield ("send", int(nbr), TAG_MIG, payload)
+            # drop long-range strays (cannot happen at CFL speeds; guard)
+            keepable = stay | (owner == left) | (owner == right)
+            pos, vel = pos[stay], vel[stay]
+            n_nbrs = len({left, right})
+            for _ in range(n_nbrs):
+                src, payload = yield ("recv_any", TAG_MIG)
+                if payload.shape[1]:
+                    pos = np.concatenate([pos, payload[0]])
+                    vel = np.concatenate([vel, payload[1]])
+        # canonical order: sort by position then velocity so the state is
+        # permutation-independent (bitwise-reproducible across failover)
+        order = np.lexsort((vel, pos))
+        return {"pos": pos[order], "vel": vel[order],
+                "t": state["t"] + 0.1}
+
+    def check(self, states) -> float:
+        """Total momentum + particle count (conservation scalar)."""
+        mom = sum(float(s["vel"].sum()) for s in states.values())
+        cnt = sum(len(s["pos"]) for s in states.values())
+        return mom + cnt

@@ -1,0 +1,3 @@
+from repro.checkpoint.io import Checkpointer
+
+__all__ = ["Checkpointer"]

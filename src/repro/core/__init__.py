@@ -1,0 +1,12 @@
+"""The paper's contribution: replication-based FT unified with ckpt/restart.
+
+Modules:
+  replica_map   - process-role algebra (six-communicator analogue)
+  coordinator   - per-node coordinators, primary timer, failure propagation
+  failure_sim   - Weibull(0.7) + Tsubame-style log-replay injectors
+  message_log   - sender-based logs, send-IDs, exactly-once replay
+  shrink        - recovery planner (promote / elastic restart)
+  virtual_mesh  - logical->physical device map hiding failures from XLA
+  ckpt_policy   - Young-Daly / Daly / replication-MTTI efficiency models
+  ft_runtime    - FTTrainer: the production step-loop integration
+"""

@@ -1,0 +1,126 @@
+"""Checkpoint-interval policy and efficiency models (paper Table 1, §7).
+
+Implements:
+  * Young-Daly optimal interval  tau* = sqrt(2 mu C)   (paper Table 1)
+  * Daly's first-order waste model for checkpoint/restart efficiency
+  * replication MTTI (mean time to interruption) for dual redundancy —
+    the birthday-problem growth that makes replication win at scale
+    (Ferreira et al. [10], reproduced analytically + by simulation)
+  * the crossover finder: smallest process count where replication beats
+    checkpointing (the paper's 8192-core result)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+def young_daly_interval(mtbf_s: float, ckpt_cost_s: float) -> float:
+    """tau* = sqrt(2 mu C)."""
+    if mtbf_s <= 0 or ckpt_cost_s < 0:
+        raise ValueError("need mtbf > 0 and ckpt cost >= 0")
+    return math.sqrt(2.0 * mtbf_s * ckpt_cost_s)
+
+
+def daly_interval(mtbf_s: float, ckpt_cost_s: float) -> float:
+    """Daly's higher-order optimum (better for C within ~2x of mu)."""
+    c, mu = ckpt_cost_s, mtbf_s
+    if c >= 2 * mu:
+        return mu
+    x = math.sqrt(c / (2 * mu))
+    return math.sqrt(2 * c * mu) * (1 + x / 3 + (c / (2 * mu)) / 9) - c
+
+
+def ckpt_efficiency(mtbf_s: float, ckpt_cost_s: float, restart_cost_s: float,
+                    interval_s: float = 0.0) -> float:
+    """Fraction of time doing useful work under checkpoint/restart.
+
+    waste = C/tau (checkpoint overhead)
+          + (tau/2 + R) / mu (expected rework + restart per failure)
+    """
+    tau = interval_s or young_daly_interval(mtbf_s, ckpt_cost_s)
+    tau = max(tau, ckpt_cost_s)
+    waste = ckpt_cost_s / tau + (tau / 2.0 + restart_cost_s) / mtbf_s
+    return max(0.0, 1.0 - waste)
+
+
+def replication_mtti(proc_mtbf_s: float, n_pairs: int) -> float:
+    """MTTI of a dual-redundant job with n_pairs (original, replica) pairs.
+
+    With exponential per-process failures, the expected time until some
+    *pair* has lost both members grows like the birthday bound:
+        MTTI ~ proc_mtbf * sqrt(pi / (4 n_pairs))
+    (each failure "colours" a pair; a second hit on a coloured pair kills
+    the job; sqrt(pi/2) / sqrt(2 n) after accounting for the two-member
+    rate). Exact small-n behaviour is covered by the simulator in
+    core/failure_sim.py; tests cross-check the two.
+    """
+    if n_pairs <= 0:
+        raise ValueError("n_pairs must be positive")
+    return proc_mtbf_s * math.sqrt(math.pi / (4.0 * n_pairs))
+
+
+def replication_efficiency(job_mtbf_s: float, n_procs: int,
+                           runtime_s: float,
+                           repair_cost_s: float = 1.0,
+                           restart_cost_s: float = 60.0,
+                           ckpt_cost_s: float = 0.0) -> float:
+    """Useful fraction for FULL replication on n_procs cores.
+
+    Redundancy halves throughput (0.5 factor). Each *process* failure costs
+    only ``repair_cost_s`` (communicator repair + message recovery, no
+    rollback — paper Fig 9). Pair-death events force a restart; with pure
+    replication (no checkpointing) the whole run restarts, so we require
+    MTTI >> runtime for this model (the paper's regime).
+    """
+    proc_mtbf = job_mtbf_s * n_procs          # per-process MTBF
+    n_pairs = n_procs // 2
+    mtti = replication_mtti(proc_mtbf, n_pairs)
+    # process-failure repair overhead (failures at job MTBF rate)
+    repair_waste = repair_cost_s / job_mtbf_s
+    # pair-death: probability runtime has a job-killing event
+    pair_waste = (runtime_s / 2.0 + restart_cost_s) / mtti if mtti > 0 else 1.0
+    pair_waste = min(pair_waste, 1.0)
+    eff = 0.5 * (1.0 - repair_waste) * (1.0 - pair_waste)
+    return max(0.0, eff)
+
+
+@dataclass
+class ScalingPoint:
+    n_procs: int
+    job_mtbf_s: float
+    ckpt_cost_s: float
+    ckpt_eff: float
+    repl_eff: float
+
+
+def scaling_study(base_procs: int, base_mtbf_s: float, base_ckpt_cost_s: float,
+                  runtime_s: float, n_doublings: int = 4,
+                  restart_cost_s: float = 60.0,
+                  ckpt_growth: float = 1.6) -> list:
+    """Reproduces the paper's Fig 7/8 structure analytically: MTBF halves per
+    doubling, checkpoint cost grows with data volume (paper Table 1 shows
+    46 -> 215 s for HPCG across 1024 -> 8192 procs ~= 1.6x per doubling)."""
+    out = []
+    for i in range(n_doublings + 1):
+        p = base_procs * (2 ** i)
+        mu = base_mtbf_s / (2 ** i)
+        c = base_ckpt_cost_s * (ckpt_growth ** i)
+        out.append(ScalingPoint(
+            n_procs=p, job_mtbf_s=mu, ckpt_cost_s=c,
+            ckpt_eff=ckpt_efficiency(mu, c, restart_cost_s),
+            repl_eff=replication_efficiency(mu, p, runtime_s,
+                                            restart_cost_s=restart_cost_s)))
+    return out
+
+
+def crossover_processes(base_procs: int, base_mtbf_s: float,
+                        base_ckpt_cost_s: float, runtime_s: float,
+                        max_doublings: int = 12) -> int:
+    """Smallest process count at which replication efficiency exceeds
+    checkpointing efficiency (paper: 8192 at mu=2000s for HPCG)."""
+    for pt in scaling_study(base_procs, base_mtbf_s, base_ckpt_cost_s,
+                            runtime_s, n_doublings=max_doublings):
+        if pt.repl_eff > pt.ckpt_eff:
+            return pt.n_procs
+    return -1

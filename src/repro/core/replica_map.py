@@ -1,0 +1,177 @@
+"""Replica-map algebra: the paper's process-role bookkeeping (§3.2, §6.2).
+
+The application runs N logical ranks; M <= N of them are replicated
+(partial replication). Workers 0..N-1 start as computational processes for
+ranks 0..N-1; workers N..N+M-1 start as replicas of ranks 0..M-1.
+
+The paper's six communicators map to derived groups:
+  eworldComm            -> alive()
+  EMPI_COMM_CMP         -> cmp_group()
+  EMPI_COMM_REP         -> rep_group()
+  EMPI_CMP_NO_REP       -> no_rep_group()
+  (the two intercomms are implicit in the rank<->worker maps)
+
+Failure handling (paper §6.2): a dead replica is dropped; a dead
+computational worker with a live replica triggers *promotion* — the replica
+becomes the computational process and "it is considered that the replica was
+the one that had failed". If both copies of a rank die the job must restart
+from the last checkpoint (ApplicationDead).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set
+
+
+class ApplicationDead(Exception):
+    """Both copies of some rank have failed: restart from checkpoint."""
+
+    def __init__(self, rank: int):
+        super().__init__(f"rank {rank}: computational and replica both dead")
+        self.rank = rank
+
+
+@dataclass
+class ReplicaMap:
+    n: int                                   # logical ranks
+    m: int                                   # replicated ranks (<= n)
+    cmp: Dict[int, Optional[int]] = field(default_factory=dict)
+    rep: Dict[int, Optional[int]] = field(default_factory=dict)
+    dead: Set[int] = field(default_factory=set)
+    promotions: int = 0
+
+    def __post_init__(self):
+        if not 0 <= self.m <= self.n:
+            raise ValueError(f"need 0 <= M <= N, got N={self.n} M={self.m}")
+        if not self.cmp:
+            self.cmp = {r: r for r in range(self.n)}
+            self.rep = {r: (self.n + r if r < self.m else None)
+                        for r in range(self.n)}
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def world_size(self) -> int:
+        return self.n + self.m
+
+    def alive(self) -> List[int]:
+        return [w for w in range(self.world_size) if w not in self.dead]
+
+    def cmp_group(self) -> List[int]:
+        return [self.cmp[r] for r in range(self.n)]
+
+    def rep_group(self) -> List[int]:
+        return [self.rep[r] for r in range(self.n) if self.rep[r] is not None]
+
+    def no_rep_group(self) -> List[int]:
+        return [self.cmp[r] for r in range(self.n) if self.rep[r] is None]
+
+    def replicated_ranks(self) -> List[int]:
+        return [r for r in range(self.n) if self.rep[r] is not None]
+
+    def role_of(self, worker: int):
+        """-> ("cmp"|"rep", rank) or ("dead", -1)."""
+        if worker in self.dead:
+            return ("dead", -1)
+        for r in range(self.n):
+            if self.cmp[r] == worker:
+                return ("cmp", r)
+            if self.rep[r] == worker:
+                return ("rep", r)
+        return ("dead", -1)
+
+    def rank_alive(self, rank: int) -> bool:
+        return self.cmp[rank] is not None
+
+    def replication_degree(self) -> float:
+        return len(self.replicated_ranks()) / self.n
+
+    # -- mutation (paper §6.2 shrink semantics) -------------------------------
+
+    def fail(self, worker: int) -> dict:
+        """Process worker death. Returns an event dict describing the repair.
+
+        Raises ApplicationDead if a rank loses both copies.
+        """
+        if worker in self.dead:
+            return {"kind": "noop", "worker": worker}
+        self.dead.add(worker)
+        role, rank = ("dead", -1)
+        for r in range(self.n):
+            if self.cmp[r] == worker:
+                role, rank = "cmp", r
+                break
+            if self.rep[r] == worker:
+                role, rank = "rep", r
+                break
+        if role == "rep":
+            self.rep[rank] = None
+            return {"kind": "drop_replica", "worker": worker, "rank": rank}
+        if role == "cmp":
+            promoted = self.rep[rank]
+            if promoted is None:
+                self.cmp[rank] = None
+                raise ApplicationDead(rank)
+            # promotion: replica becomes computational; afterwards it is as
+            # if the replica had failed (paper wording)
+            self.cmp[rank] = promoted
+            self.rep[rank] = None
+            self.promotions += 1
+            return {"kind": "promote", "worker": worker, "rank": rank,
+                    "promoted": promoted}
+        return {"kind": "noop", "worker": worker}
+
+    def fail_many(self, workers) -> List[dict]:
+        """Simultaneous (node-level) failure: all deaths are recorded before
+        any promotion decision, matching the paper's node-failure handling."""
+        events = []
+        pending = [w for w in workers if w not in self.dead]
+        self.dead.update(pending)
+        for w in pending:
+            for r in range(self.n):
+                if self.cmp[r] == w:
+                    promoted = self.rep[r]
+                    if promoted is not None and promoted in self.dead:
+                        promoted = None
+                    if promoted is None:
+                        self.cmp[r] = None
+                        self.rep[r] = None
+                        raise ApplicationDead(r)
+                    self.cmp[r] = promoted
+                    self.rep[r] = None
+                    self.promotions += 1
+                    events.append({"kind": "promote", "worker": w, "rank": r,
+                                   "promoted": promoted})
+                    break
+                if self.rep[r] == w:
+                    self.rep[r] = None
+                    events.append({"kind": "drop_replica", "worker": w,
+                                   "rank": r})
+                    break
+        return events
+
+    # -- invariants (property-tested) ----------------------------------------
+
+    def check_invariants(self) -> None:
+        seen = set()
+        for r in range(self.n):
+            c = self.cmp[r]
+            assert c is not None, f"rank {r} has no computational worker"
+            assert c not in self.dead, f"rank {r} cmp worker {c} is dead"
+            assert c not in seen, f"worker {c} owns two ranks"
+            seen.add(c)
+            p = self.rep[r]
+            if p is not None:
+                assert p not in self.dead
+                assert p not in seen
+                seen.add(p)
+
+    def restart_map(self, n_workers: int) -> "ReplicaMap":
+        """Elastic restart (paper §3.3): rebuild roles for a *different*
+        worker count. Keeps N logical ranks; replication degree shrinks to
+        whatever the spare workers allow."""
+        if n_workers < self.n:
+            raise ValueError(
+                f"cannot restart {self.n} ranks on {n_workers} workers")
+        m = min(self.n, n_workers - self.n)
+        return ReplicaMap(self.n, m)

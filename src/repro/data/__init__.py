@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, ShardedSource, TokenSource
+
+__all__ = ["DataConfig", "TokenSource", "ShardedSource"]

@@ -1,0 +1,4 @@
+"""Distribution: sharding rules + replica-aware collectives."""
+from repro.distributed.sharding import (cache_pspecs, cache_shardings,
+                                        input_pspec, input_shardings,
+                                        param_pspecs, param_shardings)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships three artifacts (the repo convention):
+  <name>.py  - pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  ops.py     - jit'd dispatch wrapper (pallas / interpret / ref)
+  ref.py     - pure-jnp oracle used by the allclose sweep tests
+"""
+from repro.kernels.ops import attention, mamba_chunk_scan, rmsnorm
+
+__all__ = ["attention", "rmsnorm", "mamba_chunk_scan"]

@@ -1,0 +1,138 @@
+"""Flash attention Pallas TPU kernel (causal + sliding-window + GQA).
+
+TPU adaptation of the paper-era GPU flash algorithm: the online-softmax
+carry (m, l, acc) lives in VMEM scratch and persists across the *minor*
+(sequential on TPU) KV grid dimension; Q/K/V tiles are staged HBM->VMEM by
+BlockSpec with MXU-aligned tiles (q_block x head_dim, kv_block x head_dim,
+head_dim a multiple of 128 for fp32/bf16 lanes).
+
+GQA is expressed in the BlockSpec index maps: query head ``h`` reads KV head
+``h // group`` — no KV replication in HBM.
+
+Block skipping (the structural win over the jnp blockwise path):
+  * causal: KV tiles strictly above the diagonal are skipped via pl.when
+  * sliding window: KV tiles strictly left of (q_start - window) are skipped
+so SWA attention costs O(S*w) and causal costs the lower triangle only
+(the jnp fallback in models/layers.py pays the full S^2 with masking).
+
+Grid: (batch, q_heads, n_q_blocks, n_kv_blocks); output written on the last
+contributing KV step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, window: int, kv_block: int, q_block: int,
+            seq_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    q_start = qi * q_block
+    kv_start = ki * kv_block
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # --- block relevance (static per grid step at trace time? no: dynamic) --
+    # causal: need kv_start <= q_end; window: need kv_end > q_start - window
+    q_end = q_start + q_block - 1
+    relevant = jnp.asarray(True)
+    if causal:
+        relevant &= kv_start <= q_end
+    if window:
+        relevant &= (kv_start + kv_block) > (q_start - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(F32)              # [Bq, D]
+        k = k_ref[0, 0].astype(F32)              # [Bk, D]
+        v = v_ref[0, 0].astype(F32)              # [Bk, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32)
+        s *= q.shape[-1] ** -0.5                  # [Bq, Bk]
+
+        q_pos = q_start + lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = kv_start + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < seq_kv
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[0]                         # [Bq]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * corr + p.sum(axis=-1)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=F32)
+        acc_ref[...] = acc_ref[...] * corr[None, :, None] + pv[None]
+        m_ref[0] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0, 0] = (acc_ref[0] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_block", "kv_block", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_block: int = 128, kv_block: int = 128,
+                    interpret: bool = False):
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D] -> [B, Hq, Sq, D].
+
+    Positions are assumed contiguous from 0 (training/prefill layout).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    nq = -(-sq // q_block)
+    nk = -(-skv // kv_block)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, kv_block=kv_block,
+        q_block=q_block, seq_kv=skv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_block, d),
+                         lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda b_, h, qi, ki, g=group: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda b_, h, qi, ki, g=group: (b_, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, d),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, q_block), F32),          # m
+            pltpu.VMEM((1, q_block), F32),          # l
+            pltpu.VMEM((1, q_block, d), F32),       # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,58 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+On TPU the kernels run compiled (`interpret=False`); on CPU (this container,
+and any test environment) they run in interpret mode, executing the kernel
+body in Python for correctness validation. ``backend="ref"`` forces the
+pure-jnp oracle — models use that path for dry-run lowering so the compiled
+HLO stays analyzable on the CPU backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.mamba_scan import mamba_chunk_scan as _mamba_pallas
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "interpret"
+    return backend
+
+
+def attention(q, k, v, *, causal=True, window=0, q_block=128, kv_block=128,
+              backend: str = "auto"):
+    """Flash attention. q: [B,Hq,S,D]; k, v: [B,Hkv,S,D]."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         q_block=q_block, kv_block=kv_block,
+                         interpret=(backend == "interpret"))
+
+
+def rmsnorm(x, w, *, eps=1e-5, block_rows=256, backend: str = "auto"):
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.rmsnorm_ref(x, w, eps=eps)
+    return _rmsnorm_pallas(x, w, eps=eps, block_rows=block_rows,
+                           interpret=(backend == "interpret"))
+
+
+def mamba_chunk_scan(x, b, c, dt, da, *, chunk=128, backend: str = "auto"):
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.mamba_chunk_scan_ref(x, b, c, dt, da)
+    return _mamba_pallas(x, b, c, dt, da, chunk=chunk,
+                         interpret=(backend == "interpret"))

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are deliberately the *simplest possible* implementations — quadratic
+attention with explicit masks, elementwise norm, exact per-timestep SSM
+recurrence — so the kernel sweep tests in tests/test_kernels.py compare
+against something obviously correct.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [B,Hq,Sq,D]; k, v: [B,Hkv,Skv,D]."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(F32), k.astype(F32))
+    s *= d ** -0.5
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(F32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-5):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps) * w.astype(F32)).astype(x.dtype)
+
+
+def mamba_chunk_scan_ref(x, b, c, dt, da):
+    """Exact per-timestep SSM recurrence.
+
+    x: [B,S,H,P]; b, c: [B,S,N]; dt, da: [B,S,H].
+    h_t = exp(da_t) h_{t-1} + dt_t * B_t x_t^T ;  y_t = C_t . h_t
+    """
+    bsz, s, h, p = x.shape
+
+    def step(hs, inp):
+        xt, bt, ct, dtt, dat = inp            # [B,H,P],[B,N],[B,N],[B,H],[B,H]
+        hs = hs * jnp.exp(dat)[:, :, None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", xt.astype(F32), bt.astype(F32), dtt)
+        yt = jnp.einsum("bn,bhpn->bhp", ct.astype(F32), hs)
+        return hs, yt
+
+    n = b.shape[-1]
+    h0 = jnp.zeros((bsz, h, p, n), F32)
+    hf, ys = lax.scan(step, h0,
+                      (x.swapaxes(0, 1), b.swapaxes(0, 1), c.swapaxes(0, 1),
+                       dt.swapaxes(0, 1), da.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), hf

@@ -1,0 +1,54 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+One pass over each row tile: mean-of-squares reduction in f32, rsqrt, scale
+by the (VMEM-resident, broadcast) weight vector. Fusing the reduction with
+the scale halves HBM traffic vs the unfused norm (read x, write y — no
+intermediate variance round-trip), which matters because RMSNorm is purely
+memory-bound (arithmetic intensity < 1 flop/byte).
+
+Grid: (n_row_blocks,) over the flattened [rows, d] view.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(F32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * w_ref[...].astype(F32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, w, *, eps: float = 1e-5, block_rows: int = 256,
+            interpret: bool = False):
+    """x: [..., d]; w: [d]."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    n = -(-rows // block_rows)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x2, w)
+    return out.reshape(orig_shape)

@@ -1,0 +1,1 @@
+"""Production launch layer: mesh, dry-run, train/serve drivers."""

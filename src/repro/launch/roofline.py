@@ -1,0 +1,148 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (spec formulas):
+    compute    = HLO_FLOPs  / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes  / (chips * HBM_BW)
+    collective = coll_bytes / (chips * ICI_BW)
+
+``cost_analysis()`` reports *per-device* flops/bytes (verified empirically
+on this backend), so global = per_device * chips and the divisions above
+collapse to per-device / per-chip-peak. Collective bytes are NOT in
+cost_analysis: we parse the post-SPMD HLO and sum operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[8,512]{1,0}   or  f32[]   appearing in operand positions
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_stats(hlo_text: str) -> Dict[str, dict]:
+    """Per-collective-kind {count, bytes} summed over operand sizes.
+
+    Parses each collective op line; operand shapes are the dtype[shape]
+    groups in the argument list (the first dtype[shape] on the line is the
+    result type — skipped; '-done' ops are skipped to avoid double-counting
+    async pairs).
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if m is None or "-done(" in line:
+            continue
+        kind = m.group(1)
+        # operand section: everything after the opcode's opening paren
+        idx = line.find(m.group(0))
+        args = line[line.find("(", idx + len(m.group(0)) - 1) + 1:]
+        # strip attributes after the closing paren of the operand list
+        depth, end = 1, len(args)
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_sec = args[:end]
+        total = sum(_shape_bytes(d, s)
+                    for d, s in _SHAPE_RE.findall(operand_sec))
+        if total == 0:
+            # fallback: some dumps omit operand types; use the result type
+            pre = line[:idx + len(m.group(0))]
+            found = _SHAPE_RE.findall(pre)
+            total = sum(_shape_bytes(d, s) for d, s in found)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += total
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float            # fused lower bound (TPU-realistic)
+    collective_bytes_per_device: float
+    collective_breakdown: dict
+    model_flops_global: float          # 6*N*D (train) / 2*N*D (serve)
+    bytes_per_device_ub: float = 0.0   # unfused op-level upper bound
+    bytes_by_op: Optional[dict] = None
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    memory_ub_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    useful_ratio: float = 0.0          # MODEL_FLOPS / HLO_FLOPs(global)
+    memory_per_device: Optional[dict] = None
+
+    def finish(self) -> "RooflineTerms":
+        self.compute_s = self.flops_per_device / PEAK_FLOPS
+        self.memory_s = self.bytes_per_device / HBM_BW
+        self.memory_ub_s = self.bytes_per_device_ub / HBM_BW
+        self.collective_s = self.collective_bytes_per_device / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.dominant = max(terms, key=terms.get)
+        hlo_global = self.flops_per_device * self.chips
+        self.useful_ratio = (self.model_flops_global / hlo_global
+                             if hlo_global else 0.0)
+        return self
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the *dominant-term* time is to the pure-compute ideal of
+        the model FLOPs — the headline perf score."""
+        ideal = self.model_flops_global / (self.chips * PEAK_FLOPS)
+        return ideal / self.bound_time_s if self.bound_time_s else 0.0
+
+    def as_dict(self) -> dict:
+        d = asdict(self)
+        d["bound_time_s"] = self.bound_time_s
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def model_flops(n_params_active: int, tokens_per_step: int,
+                kind: str) -> float:
+    """6*N*D for training, 2*N*D for forward-only (prefill/decode)."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens_per_step

@@ -1,0 +1,54 @@
+"""Step functions (train / prefill / decode) shared by the dry-run, the
+trainer and the server. Pure functions of explicit state — no globals — so
+they lower identically on every mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import api as model_api
+from repro.optim import adamw
+
+
+def make_model(run: RunConfig):
+    return model_api.build_model(
+        run.model, remat=run.remat, kv_block=run.kv_block,
+        seq_chunk=run.seq_chunk)
+
+
+def make_opt_cfg(run: RunConfig) -> adamw.AdamWConfig:
+    return adamw.AdamWConfig(lr=run.learning_rate,
+                             weight_decay=run.weight_decay,
+                             beta1=run.beta1, beta2=run.beta2)
+
+
+def make_train_step(run: RunConfig):
+    model = make_model(run)
+    opt_cfg = make_opt_cfg(run)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        new_params, new_opt = adamw.update(opt_cfg, grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    return train_step, model
+
+
+def make_prefill_step(run: RunConfig):
+    model = make_model(run)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step, model
+
+
+def make_decode_step(run: RunConfig):
+    model = make_model(run)
+
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return decode_step, model

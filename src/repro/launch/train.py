@@ -1,0 +1,114 @@
+"""Training driver: any assigned arch, any FT mode, on the current devices.
+
+On this container it trains *reduced* configs end-to-end on CPU (the
+examples use it); on a real pod the same driver trains the full config —
+the mesh/sharding path is identical to the dry-run's.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --reduced \
+      --steps 50 --ft-mode combined --mtbf 30 --kill 12:0 --kill 30:1
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import RunConfig, get_arch, TRAIN_4K
+from repro.configs.base import FTConfig, ShapeConfig
+from repro.core.ft_runtime import FTTrainer
+from repro.data import DataConfig, TokenSource
+from repro.launch.step_fns import make_opt_cfg, make_train_step
+from repro.models import build_model
+from repro.optim import adamw
+
+
+def build_trainer(arch: str, *, reduced: bool = True, batch: int = 8,
+                  seq: int = 128, ft: FTConfig, ckpt_dir=None,
+                  kill_schedule=None, seed: int = 0,
+                  n_logical_workers: int = 8, lr: float = 1e-3):
+    cfg = get_arch(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    shape = ShapeConfig("cli", seq_len=seq, global_batch=batch, kind="train")
+    run = RunConfig(model=cfg, shape=shape, remat="none",
+                    seq_chunk=min(seq, 512), kv_block=min(seq, 128),
+                    learning_rate=lr)
+    step_fn, model = make_train_step(run)
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    data = TokenSource(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                  global_batch=batch, seed=seed))
+
+    def batch_fn(step):
+        b = data.batch_at(step)
+        if cfg.family == "audio":
+            b["frames"] = jnp.zeros((batch, cfg.n_frames, cfg.d_model),
+                                    jnp.bfloat16)
+        if cfg.family == "vlm":
+            b["image_embeds"] = jnp.zeros(
+                (batch, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+        return b
+
+    def init_state():
+        params = model.init(jax.random.key(seed))
+        return {"params": params, "opt": adamw.init(params)}
+
+    def train_step(state, b):
+        params, opt, loss = jitted(state["params"], state["opt"], b)
+        return {"params": params, "opt": opt}, loss
+
+    return FTTrainer(train_step=train_step, init_state=init_state,
+                     batch_fn=batch_fn, ft=ft, ckpt_dir=ckpt_dir,
+                     n_logical_workers=n_logical_workers,
+                     kill_schedule=kill_schedule)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ft-mode", default="combined",
+                    choices=["none", "checkpoint", "replication", "combined"])
+    ap.add_argument("--mtbf", type=float, default=1e9)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-interval", type=float, default=0.0)
+    ap.add_argument("--kill", action="append", default=[],
+                    help="step:worker[,worker...] failure injection")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    kills = {}
+    for spec in args.kill:
+        s, ws = spec.split(":")
+        kills[int(s)] = [int(w) for w in ws.split(",")]
+
+    ft = FTConfig(mode=args.ft_mode, mtbf_s=args.mtbf,
+                  ckpt_interval_s=args.ckpt_interval)
+    trainer = build_trainer(args.arch, reduced=args.reduced,
+                            batch=args.batch, seq=args.seq, ft=ft,
+                            ckpt_dir=args.ckpt_dir, kill_schedule=kills,
+                            seed=args.seed)
+    t0 = time.perf_counter()
+    rep = trainer.run(args.steps)
+    dt = time.perf_counter() - t0
+    print(f"arch={args.arch} mode={args.ft_mode} steps={rep.steps} "
+          f"loss[first,last]=({rep.losses[0]:.4f},{rep.losses[-1]:.4f}) "
+          f"failures={rep.failures} promotions={rep.promotions} "
+          f"restarts={rep.restarts} ckpts={rep.ckpt_writes} "
+          f"rolled_back={rep.rolled_back_steps} wall={dt:.1f}s")
+    if not (np.isfinite(rep.losses).all()):
+        print("ERROR: non-finite loss", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,6 @@
+"""Model substrate: all assigned architecture families, pure JAX."""
+from repro.models.api import (abstract_cache, abstract_state, build_model,
+                              input_specs, param_count)
+
+__all__ = ["build_model", "input_specs", "param_count", "abstract_cache",
+           "abstract_state"]

@@ -1,0 +1,193 @@
+"""Mamba2 block (SSD chunkwise-parallel scan), used by the Zamba2 hybrid.
+
+The SSD form splits the sequence into chunks of ``ssm_chunk``: within a chunk
+the recurrence is evaluated as masked matmuls (MXU-friendly); across chunks a
+small state ``h[B, H, P, N]`` is carried by a scan of length L/chunk. Decode
+is the exact single-step recurrence (O(1) per token) — this is why the hybrid
+arch runs the long_500k shape.
+
+Shapes: d_inner = expand * d_model; P = headdim (64); H = d_inner / P;
+N = ssm_state; single B/C group (n_groups=1, as in Zamba2).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+F32 = jnp.float32
+Params = Any
+
+HEADDIM = 64
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.expand * cfg.d_model
+    p = min(HEADDIM, d_inner)
+    h = d_inner // p
+    n = cfg.ssm_state
+    return d_inner, h, p, n
+
+
+def mamba2_params(cfg: ModelConfig, rng, dtype) -> Params:
+    """Projections are kept as separate weights (z / x / B / C / dt) rather
+    than one fused in_proj: each output dim then shards independently on the
+    `model` axis with no unaligned splits of sharded dims in the HLO."""
+    d = cfg.d_model
+    d_inner, h, p, n = dims(cfg)
+    r = L.split_rngs(rng, 7)
+    return {
+        "ln": L.rmsnorm_params(d, dtype),
+        "in_z": L._dense_init(r[0], (d, d_inner), dtype),
+        "in_x": L._dense_init(r[1], (d, d_inner), dtype),
+        "in_b": L._dense_init(r[2], (d, n), dtype),
+        "in_c": L._dense_init(r[3], (d, n), dtype),
+        "in_dt": L._dense_init(r[4], (d, h), dtype),
+        "conv_w": L._dense_init(r[5], (cfg.conv_kernel, d_inner + 2 * n),
+                                dtype, 2.0),
+        "conv_b": jnp.zeros((d_inner + 2 * n,), dtype),
+        "a_log": jnp.zeros((h,), F32),              # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((h,), F32),
+        "dt_bias": jnp.full((h,), -2.0, F32),       # softplus(-2) ~ 0.12
+        "out_norm": L.rmsnorm_params(d_inner, dtype),
+        "out_proj": L._dense_init(r[6], (d_inner, d), dtype),
+    }
+
+
+def _project(cfg: ModelConfig, prm: Params, xn):
+    """xn -> (z, xbc, dt_raw); xbc = concat(x, B, C) for the shared conv."""
+    z = jnp.einsum("bsd,de->bse", xn, prm["in_z"])
+    xs = jnp.einsum("bsd,de->bse", xn, prm["in_x"])
+    bm = jnp.einsum("bsd,dn->bsn", xn, prm["in_b"])
+    cm = jnp.einsum("bsd,dn->bsn", xn, prm["in_c"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", xn, prm["in_dt"])
+    return z, jnp.concatenate([xs, bm, cm], axis=-1), dt_raw
+
+
+def _causal_conv(xbc, w, b, conv_state=None):
+    """Depthwise causal conv along seq. xbc: [B,S,C]; w: [K,C].
+
+    conv_state: [B, K-1, C] trailing inputs from the previous segment.
+    Returns (y, new_conv_state).
+    """
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    y = sum(xp[:, i:i + xbc.shape[1], :] * w[i] for i in range(k)) + b
+    new_state = xp[:, xp.shape[1] - (k - 1):, :]
+    return jax.nn.silu(y.astype(F32)).astype(xbc.dtype), new_state
+
+
+def mamba2_apply(cfg: ModelConfig, prm: Params, x, *, state=None,
+                 return_state: bool = False):
+    """x: [B,S,d]. state = {"h": [B,H,P,N], "conv": [B,K-1,conv_dim]}."""
+    b, s, d = x.shape
+    d_inner, nh, p, n = dims(cfg)
+    chunk = min(cfg.ssm_chunk, s)
+
+    xn = L.rmsnorm(prm["ln"], x, cfg.norm_eps)
+    z, xbc, dt_raw = _project(cfg, prm, xn)
+    conv_in = state["conv"] if state is not None else None
+    xbc, conv_state = _causal_conv(xbc, prm["conv_w"], prm["conv_b"], conv_in)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xs = xs.reshape(b, s, nh, p)
+    dt = jax.nn.softplus(dt_raw.astype(F32) + prm["dt_bias"])   # [B,S,H]
+    a = -jnp.exp(prm["a_log"])                                  # [H]
+    da = dt * a                                                  # [B,S,H] log decay
+
+    # pad to a chunk multiple with zero-contribution steps: dt=0 => decay 1
+    # and no state update, so padded steps are exact no-ops on the carry
+    pad = (-s) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+    s_pad = s + pad
+    n_chunks = s_pad // chunk
+
+    h0 = (state["h"].astype(F32) if state is not None
+          else jnp.zeros((b, nh, p, n), F32))
+
+    def to_chunks(t):
+        return t.reshape((b, n_chunks, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    xs_c, b_c, c_c, dt_c, da_c = map(to_chunks, (xs, bmat, cmat, dt, da))
+
+    def body(h, inp):
+        xc, bc, cc, dtc, dac = inp
+        ca = jnp.cumsum(dac, axis=1)                            # [B,T,H]
+        # intra-chunk: M[t,s] = (C_t . B_s) exp(ca_t - ca_s) dt_s,  s <= t
+        cb = jnp.einsum("btn,bsn->bts", cc.astype(F32), bc.astype(F32))
+        ldiff = ca[:, :, None, :] - ca[:, None, :, :]           # [B,T,S,H]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        m = jnp.where(tri[None, :, :, None],
+                      jnp.exp(ldiff) * dtc[:, None, :, :], 0.0)
+        m = m * cb[..., None]
+        # bf16 score tile for the contraction (f32 accumulate): the [T,S,H]
+        # tiles dominate the chunk-scan HBM traffic (Perf iteration H5)
+        y_intra = jnp.einsum("btsh,bshp->bthp", m.astype(jnp.bfloat16),
+                             xc.astype(jnp.bfloat16),
+                             preferred_element_type=F32)
+        # inter-chunk: y += C_t . (exp(ca_t) h)
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", cc.astype(F32), h,
+                             jnp.exp(ca))
+        # carry: h' = exp(ca_T) h + sum_s exp(ca_T - ca_s) dt_s B_s x_s^T
+        ca_t = ca[:, -1, :]                                     # [B,H]
+        w_s = jnp.exp(ca_t[:, None, :] - ca) * dtc              # [B,T,H]
+        h_new = jnp.exp(ca_t)[:, :, None, None] * h + jnp.einsum(
+            "bshp,bsn,bsh->bhpn", xc.astype(F32), bc.astype(F32), w_s)
+        return h_new, y_intra + y_inter
+
+    h_f, ys = lax.scan(body, h0, (xs_c, b_c, c_c, dt_c, da_c))
+    y = ys.swapaxes(0, 1).reshape(b, s_pad, nh, p)[:, :s]
+    y = y + xs[:, :s].astype(F32) * prm["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = L.rmsnorm(prm["out_norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    out = x + jnp.einsum("bse,ed->bsd", y, prm["out_proj"])
+    if return_state:
+        return out, {"h": h_f, "conv": conv_state.astype(x.dtype)}
+    return out
+
+
+def mamba2_decode(cfg: ModelConfig, prm: Params, x, state):
+    """One-token recurrence. x: [B,1,d]."""
+    b, _, d = x.shape
+    d_inner, nh, p, n = dims(cfg)
+    xn = L.rmsnorm(prm["ln"], x, cfg.norm_eps)
+    z, xbc, dt_raw = _project(cfg, prm, xn)
+    xbc, conv_state = _causal_conv(xbc, prm["conv_w"], prm["conv_b"],
+                                   state["conv"])
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xt = xs[:, 0].reshape(b, nh, p).astype(F32)
+    bt = bmat[:, 0].astype(F32)                                  # [B,N]
+    ct = cmat[:, 0].astype(F32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(F32) + prm["dt_bias"])  # [B,H]
+    a = -jnp.exp(prm["a_log"])
+    dec = jnp.exp(dt * a)                                        # [B,H]
+    h = state["h"].astype(F32) * dec[:, :, None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xt, bt, dt)
+    y = jnp.einsum("bn,bhpn->bhp", ct, h)
+    y = y + xt * prm["d_skip"][None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = L.rmsnorm(prm["out_norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    out = x + jnp.einsum("bse,ed->bsd", y, prm["out_proj"])
+    return out, {"h": h, "conv": conv_state.astype(x.dtype)}
+
+
+def empty_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_inner, nh, p, n = dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {"h": jnp.zeros((batch, nh, p, n), F32),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype)}

@@ -1,0 +1,192 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared-weight attention block.
+
+Layer layout for n_layers=81, attn_every=6:
+  13 groups of [shared attention, 6 mamba blocks] + 3 tail mamba blocks.
+The attention block's *weights* are shared across all applications (Zamba2's
+parameter-sharing trick) but each application has its own KV cache at serve
+time. The shared attention runs sliding-window at long context, which keeps
+the arch sub-quadratic end to end (long_500k applicable).
+
+Simplifications vs the released checkpoints (DESIGN.md): no per-application
+LoRA on the shared block and no embedding-concat at the shared-block input.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+
+F32 = jnp.float32
+Params = Any
+
+
+class Zamba:
+    def __init__(self, cfg: ModelConfig, *, remat: str = "full",
+                 kv_block: int = 512, seq_chunk: int = 2048):
+        assert cfg.family == "hybrid"
+        self.cfg = cfg
+        self.remat = remat
+        self.kv_block = kv_block
+        self.seq_chunk = seq_chunk
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.n_groups = cfg.n_layers // cfg.attn_every
+        self.tail = cfg.n_layers % cfg.attn_every
+
+    def _maybe_remat(self, fn):
+        return fn if self.remat == "none" else jax.checkpoint(fn)
+
+    def init(self, rng) -> Params:
+        cfg, dtype = self.cfg, self.dtype
+        g, k, t = self.n_groups, cfg.attn_every, self.tail
+        r_e, r_m, r_t, r_a, r_f = jax.random.split(rng, 5)
+        rm = jax.random.split(r_m, g * k).reshape(g, k)
+        p = {
+            "embed": L.embed_params(cfg, r_e, dtype),
+            "mamba": jax.vmap(jax.vmap(
+                lambda r: M2.mamba2_params(cfg, r, dtype)))(rm),
+            "attn_ln": L.rmsnorm_params(cfg.d_model, dtype),
+            "attn": L.attention_params(cfg, r_a, dtype),
+            "attn_mlp_ln": L.rmsnorm_params(cfg.d_model, dtype),
+            "attn_mlp": L.mlp_params(cfg.d_model, cfg.d_ff, r_f, dtype),
+            "ln_f": L.rmsnorm_params(cfg.d_model, dtype),
+        }
+        if t:
+            rt = jax.random.split(r_t, t)
+            p["mamba_tail"] = jax.vmap(
+                lambda r: M2.mamba2_params(cfg, r, dtype))(rt)
+        return p
+
+    def init_abstract(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def _shared_attn(self, params, x, positions, cache=None, window=None):
+        cfg = self.cfg
+        h, new_cache = L.attention_apply(
+            cfg, params["attn"], L.rmsnorm(params["attn_ln"], x, cfg.norm_eps),
+            positions, cache=cache, kv_block=self.kv_block, window=window)
+        x = x + h
+        x = x + L.mlp_apply(params["attn_mlp"],
+                            L.rmsnorm(params["attn_mlp_ln"], x, cfg.norm_eps))
+        return x, new_cache
+
+    def backbone(self, params, x, positions, *, window=None):
+        cfg = self.cfg
+
+        def group(xc, mp):
+            xc, _ = self._shared_attn(params, xc, positions, window=window)
+
+            def m_body(xi, mpi):
+                return M2.mamba2_apply(cfg, mpi, xi), None
+            xc, _ = lax.scan(self._maybe_remat(m_body), xc, mp)
+            return xc, None
+
+        x, _ = lax.scan(self._maybe_remat(group), x, params["mamba"])
+        if self.tail:
+            def t_body(xi, mpi):
+                return M2.mamba2_apply(cfg, mpi, xi), None
+            x, _ = lax.scan(self._maybe_remat(t_body), x, params["mamba_tail"])
+        return L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        b, s = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = L.embed_lookup(params["embed"], tokens)
+        # training at 4k: window >= seq ⇒ effectively full attention
+        x = self.backbone(params, x, pos, window=0)
+        return L.chunked_lm_loss(cfg, params["embed"], x, labels,
+                                 self.seq_chunk)
+
+    # -- serve -------------------------------------------------------------
+
+    def init_cache(self, batch: int, seq_len: int) -> dict:
+        cfg = self.cfg
+        g, k, t = self.n_groups, cfg.attn_every, self.tail
+        cap = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+        attn_cache = L.empty_cache(cfg, batch, cap, self.dtype, n_layers=g)
+        mstate = M2.empty_state(cfg, batch, self.dtype)
+        mamba = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (g, k) + a.shape).copy(), mstate)
+        out = {"attn": attn_cache, "mamba": mamba}
+        if t:
+            out["mamba_tail"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (t,) + a.shape).copy(), mstate)
+        return out
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = L.embed_lookup(params["embed"], tokens)
+        win = cfg.sliding_window if s > cfg.sliding_window else 0
+
+        def group(xc, mp):
+            h_in = L.rmsnorm(params["attn_ln"], xc, cfg.norm_eps)
+            q, k, v = L._project_qkv(cfg, params["attn"], h_in, pos,
+                                     cfg.rope_theta)
+            out = L.blockwise_attention(q, k, v, pos, pos, window=win,
+                                        kv_block=self.kv_block)
+            xc = xc + jnp.einsum("bshe,hed->bsd", out, params["attn"]["wo"])
+            xc = xc + L.mlp_apply(
+                params["attn_mlp"],
+                L.rmsnorm(params["attn_mlp_ln"], xc, cfg.norm_eps))
+            a_cache = L.init_cache_from(cfg, k, v, pos, cfg.sliding_window)
+
+            def m_body(xi, mpi):
+                xi, st = M2.mamba2_apply(cfg, mpi, xi, return_state=True)
+                return xi, st
+            xc, m_states = lax.scan(self._maybe_remat(m_body), xc, mp)
+            return xc, (a_cache, m_states)
+
+        x, (attn_cache, m_states) = lax.scan(self._maybe_remat(group), x,
+                                             params["mamba"])
+        out = {"attn": attn_cache, "mamba": m_states}
+        if self.tail:
+            def t_body(xi, mpi):
+                xi, st = M2.mamba2_apply(cfg, mpi, xi, return_state=True)
+                return xi, st
+            x, t_states = lax.scan(self._maybe_remat(t_body), x,
+                                   params["mamba_tail"])
+            out["mamba_tail"] = t_states
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = L.unembed(cfg, params["embed"], x[:, -1:, :])
+        return logits, out
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], tokens)
+
+        def group(xc, gp):
+            mp, ac, mst = gp
+            xi, new_ac = self._shared_attn(params, xc, pos, cache=ac,
+                                           window=cfg.sliding_window)
+
+            def m_body(xj, inp):
+                mpi, sti = inp
+                xj, st = M2.mamba2_decode(cfg, mpi, xj, sti)
+                return xj, st
+            xi, new_m = lax.scan(m_body, xi, (mp, mst))
+            return xi, (new_ac, new_m)
+
+        x, (new_attn, new_mamba) = lax.scan(
+            group, x, (params["mamba"], cache["attn"], cache["mamba"]))
+        new_cache = {"attn": new_attn, "mamba": new_mamba}
+        if self.tail:
+            def t_body(xj, inp):
+                mpi, sti = inp
+                xj, st = M2.mamba2_decode(cfg, mpi, xj, sti)
+                return xj, st
+            x, new_t = lax.scan(t_body, x,
+                                (params["mamba_tail"], cache["mamba_tail"]))
+            new_cache["mamba_tail"] = new_t
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = L.unembed(cfg, params["embed"], x)
+        return logits, new_cache

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, init, init_abstract, update, schedule
+
+__all__ = ["AdamWConfig", "AdamWState", "init", "init_abstract", "update",
+           "schedule"]

@@ -1,0 +1,4 @@
+"""Simulation runtime: the paper's failure pipeline with real numerics."""
+from repro.simrt.runtime import CostModel, RunResult, SimRuntime, TimeBreakdown
+
+__all__ = ["SimRuntime", "CostModel", "RunResult", "TimeBreakdown"]

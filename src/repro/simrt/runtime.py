@@ -1,0 +1,583 @@
+"""Multi-worker simulation runtime: the paper's end-to-end failure pipeline
+executed with real numerics on one machine.
+
+Logical MPI workers are Python generators that yield communication ops; the
+runtime is the scheduler + network + coordinator + failure injector. It
+implements, faithfully to FTHP-MPI:
+
+  * partial/full replication with the paper's parallel communication scheme
+    (cmp->cmp and rep->rep in parallel; intercomm fill-in when one side has
+    no replica; replica-side skip when the destination has no replica),
+  * MPI_ANY_SOURCE ordering: the computational receiver picks the message
+    and forwards (src, tag) to its replica, which receives the same stream,
+  * sender-based message logging with piggybacked send-IDs; on failure the
+    network is drained, lost messages are replayed from sender logs and
+    duplicates are skipped by send-ID (exactly-once),
+  * coordinated checkpointing (baseline + incremental, Young-Daly timer on
+    the primary coordinator) and elastic restart (possibly with a lower
+    replication degree) when both copies of a rank die,
+  * communicator shrinking + replica promotion on worker/node failure, in
+    virtual time with the paper's cost model (Fig 9 time components).
+
+Apps (repro.apps.*) write worker-local code:
+
+    def step(self, rank, state, step_idx):
+        ...
+        got = yield ("exchange", {nbr: payload}, TAG)
+        total = yield ("allreduce", local, "sum")
+        return new_state
+"""
+from __future__ import annotations
+
+import copy
+import os
+import pickle
+import time as _time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import FTConfig
+from repro.core import ckpt_policy
+from repro.core.coordinator import ClusterTopology, CoordinatorSet
+from repro.core.failure_sim import FailureEvent
+from repro.core.message_log import LoggedMessage, ReceiverCursor, SenderLog
+from repro.core.replica_map import ApplicationDead, ReplicaMap
+
+
+@dataclass
+class TimeBreakdown:
+    """Virtual-time components (the paper's Fig 9)."""
+
+    useful: float = 0.0
+    redundant: float = 0.0          # replica share of compute
+    ckpt_write: float = 0.0
+    restore: float = 0.0
+    rollback: float = 0.0           # lost work re-executed after restart
+    repair: float = 0.0             # shrink + message recovery
+    log_removal: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return (self.useful + self.redundant + self.ckpt_write + self.restore
+                + self.rollback + self.repair + self.log_removal)
+
+    def as_dict(self) -> dict:
+        return {"useful": self.useful, "redundant": self.redundant,
+                "ckpt_write": self.ckpt_write, "restore": self.restore,
+                "rollback": self.rollback, "repair": self.repair,
+                "log_removal": self.log_removal, "total": self.total}
+
+
+@dataclass
+class RunResult:
+    states: Dict[int, Any]
+    time: TimeBreakdown
+    steps_done: int
+    failures: int = 0
+    promotions: int = 0
+    restarts: int = 0
+    replays: int = 0
+    duplicates_skipped: int = 0
+    wall_s: float = 0.0
+    check_value: Optional[float] = None
+
+    @property
+    def efficiency(self) -> float:
+        t = self.time.total
+        return self.time.useful / t if t > 0 else 1.0
+
+
+@dataclass
+class CostModel:
+    """Virtual-time costs. Defaults are per-step scale-free units; the
+    benchmarks set them from the paper's Table 1 measurements."""
+
+    step_time_s: float = 1.0
+    ckpt_cost_s: float = 0.05
+    restore_cost_s: float = 0.05
+    repair_cost_s: float = 0.005        # shrink + replay (paper: negligible)
+    log_removal_cost_s: float = 0.001
+
+
+class _Worker:
+    __slots__ = ("wid", "state", "cursor", "gen", "pending", "waiting",
+                 "op_index", "inbox", "wc_consumed", "done", "send_counters")
+
+    def __init__(self, wid: int, state):
+        self.wid = wid
+        self.state = state
+        self.cursor = ReceiverCursor(wid)
+        self.gen = None
+        self.pending = None          # op tuple currently blocking this worker
+        self.waiting = False
+        self.op_index = 0            # collective-matching index within a step
+        self.inbox: deque = deque()  # LoggedMessage arrivals (FIFO)
+        self.wc_consumed = 0         # wildcard-order cursor (rank stream)
+        self.done = False
+        # per-stream send-id counters: cmp and rep advance these identically
+        # because they execute identical sends — the piggybacked send-id is
+        # therefore consistent across the two copies (paper §6.3)
+        self.send_counters: Dict[Tuple[int, int, int], int] = {}
+
+
+class SimRuntime:
+    def __init__(self, app, ft: FTConfig, *, workers_per_node: int = 4,
+                 costs: CostModel = None, ckpt_dir: str = None,
+                 failure_events: List[FailureEvent] = None,
+                 respawn_on_restart: bool = True,
+                 drop_inflight_on_failure: bool = True,
+                 seed: int = 0):
+        self.app = app
+        self.ft = ft
+        self.n = app.n_ranks
+        self.m = int(round(ft.replication_degree * self.n)) \
+            if ft.mode in ("replication", "combined") else 0
+        self.rmap = ReplicaMap(self.n, self.m)
+        self.topology = ClusterTopology(self.rmap.world_size, workers_per_node)
+        self.costs = costs or CostModel()
+        self.ckpt_dir = ckpt_dir
+        self.respawn = respawn_on_restart
+        self.drop_inflight = drop_inflight_on_failure
+        self.rng = np.random.default_rng(seed)
+
+        interval = ft.ckpt_interval_s or ckpt_policy.young_daly_interval(
+            max(ft.mtbf_s, 1e-9), self.costs.ckpt_cost_s) \
+            if ft.mode in ("checkpoint", "combined") else float("inf")
+        self.coords = CoordinatorSet(self.topology, interval)
+
+        self.events = sorted(failure_events or [], key=lambda e: e.time_s)
+        self.event_i = 0
+
+        # rank-level logs: the sender-based message log (owned by the cmp
+        # worker; part of the replication payload in a real deployment)
+        self.send_logs = {r: SenderLog(r, ft.message_log_limit_bytes)
+                          for r in range(self.n)}
+        self.wc_order: Dict[int, List[Tuple[int, int, int]]] = \
+            {r: [] for r in range(self.n)}   # rank -> [(src, tag, send_id)]
+        self._arrival_counter = 0
+
+        self.workers: Dict[int, _Worker] = {}
+        for w in self.rmap.alive():
+            role, rank = self.rmap.role_of(w)
+            self.workers[w] = _Worker(w, app.init_state(rank))
+
+        self.t = 0.0
+        self.step_idx = 0
+        self.max_step_done = 0
+        self.result = RunResult(states={}, time=TimeBreakdown(), steps_done=0)
+        self.last_ckpt_step = 0
+        self._ckpt_mem: Optional[dict] = None
+        if ckpt_dir:
+            os.makedirs(ckpt_dir, exist_ok=True)
+        self._write_checkpoint(baseline=True)
+
+    # ------------------------------------------------------------------ ckpt
+
+    def _ckpt_path(self, rank: int, baseline: bool = False) -> str:
+        kind = "baseline" if baseline else "latest"
+        return os.path.join(self.ckpt_dir, f"{kind}_rank{rank}.pkl")
+
+    def _snapshot(self) -> dict:
+        """Rank-level snapshot: app state + log/cursor/wildcard state —
+        written only by computational workers (paper §3.3 incremental)."""
+        snap = {"step": self.step_idx, "ranks": {}}
+        for r in range(self.n):
+            w = self.workers[self.rmap.cmp[r]]
+            snap["ranks"][r] = {
+                "state": copy.deepcopy(w.state),
+                "cursor": w.cursor.state(),
+                "send_log": self.send_logs[r].state(),
+                "wc_order": list(self.wc_order[r]),
+                "wc_consumed": w.wc_consumed,
+                "send_counters": dict(w.send_counters),
+            }
+        return snap
+
+    def _write_checkpoint(self, baseline: bool = False):
+        snap = self._snapshot()
+        self._ckpt_mem = snap
+        self.last_ckpt_step = self.step_idx
+        if self.ckpt_dir:
+            for r, data in snap["ranks"].items():
+                with open(self._ckpt_path(r, baseline), "wb") as f:
+                    pickle.dump({"step": snap["step"], **data}, f)
+            if not baseline:
+                with open(os.path.join(self.ckpt_dir, "LATEST"), "w") as f:
+                    f.write(str(snap["step"]))
+        if not baseline:
+            self.result.time.ckpt_write += self.costs.ckpt_cost_s
+            self.t += self.costs.ckpt_cost_s
+            # checkpoint boundary: trim message logs (log removal component)
+            for log in self.send_logs.values():
+                log.trim_before_step(self.step_idx)
+            self.result.time.log_removal += self.costs.log_removal_cost_s
+            self.t += self.costs.log_removal_cost_s
+        self.coords.restart_timer(self.t)
+
+    def _restore_checkpoint(self):
+        """Elastic restart (paper §3.3): rebuild the world from the last
+        checkpoint. With respawn, failed slots are refilled (same N+M);
+        otherwise the replication degree shrinks to the surviving workers."""
+        snap = self._ckpt_mem
+        if self.ckpt_dir and os.path.exists(
+                os.path.join(self.ckpt_dir, "LATEST")):
+            ranks = {}
+            for r in range(self.n):
+                with open(self._ckpt_path(r), "rb") as f:
+                    ranks[r] = pickle.load(f)
+            snap = {"step": ranks[0]["step"], "ranks": ranks}
+        rolled_back = self.step_idx - snap["step"]
+
+        n_workers = self.rmap.world_size if self.respawn else \
+            len(self.rmap.alive())
+        self.rmap = self.rmap.restart_map(n_workers)
+        self.topology = ClusterTopology(self.rmap.world_size,
+                                        self.topology.workers_per_node)
+        self.workers = {}
+        for w in self.rmap.alive():
+            role, rank = self.rmap.role_of(w)
+            data = snap["ranks"][rank]
+            nw = _Worker(w, copy.deepcopy(data["state"]))
+            nw.cursor.load_state(data["cursor"])
+            nw.wc_consumed = data["wc_consumed"]
+            nw.send_counters = dict(data["send_counters"])
+            self.workers[w] = nw
+        for r in range(self.n):
+            self.send_logs[r].load_state(snap["ranks"][r]["send_log"])
+            self.wc_order[r] = list(snap["ranks"][r]["wc_order"])
+
+        self.step_idx = snap["step"]
+        self.result.restarts += 1
+        self.result.time.restore += self.costs.restore_cost_s
+        self.t += self.costs.restore_cost_s
+
+    # --------------------------------------------------------------- routing
+
+    def _deliver(self, worker: _Worker, msg: LoggedMessage):
+        self._arrival_counter += 1
+        worker.inbox.append(msg)
+
+    def _route_send(self, sender: _Worker, dst_rank: int, tag: int,
+                    payload, log: bool):
+        """Implements the paper's §5 parallel communication scheme."""
+        role, src_rank = self.rmap.role_of(sender.wid)
+        payload = copy.deepcopy(payload)
+        stream = (src_rank, dst_rank, tag)
+        sid = sender.send_counters.get(stream, 0)
+        sender.send_counters[stream] = sid + 1
+        if role == "cmp":
+            if log:
+                self.send_logs[src_rank].record(dst_rank, tag, payload,
+                                                self.step_idx, send_id=sid)
+            msg = LoggedMessage(sid, src_rank, dst_rank, tag, payload,
+                                self.step_idx)
+            self._deliver(self.workers[self.rmap.cmp[dst_rank]], msg)
+            # intercomm fill-in: destination replicated, source not
+            if self.rmap.rep[dst_rank] is not None and \
+                    self.rmap.rep[src_rank] is None:
+                self._deliver(self.workers[self.rmap.rep[dst_rank]],
+                              copy.deepcopy(msg))
+        else:  # replica sender
+            if self.rmap.rep[dst_rank] is not None:
+                msg = LoggedMessage(sid, src_rank, dst_rank, tag, payload,
+                                    self.step_idx)
+                self._deliver(self.workers[self.rmap.rep[dst_rank]], msg)
+            # else: skip (paper: no replica destination -> source replica
+            # skips the send)
+
+    def _match_recv(self, worker: _Worker, src_rank: Optional[int], tag: int):
+        """Find (and consume) the next matching inbox message; None if none.
+        Wildcard receives on replicas follow the rank's cmp-chosen order."""
+        role, rank = self.rmap.role_of(worker.wid)
+        if src_rank is None and role == "rep":
+            order = self.wc_order[rank]
+            if worker.wc_consumed >= len(order):
+                return None
+            want_src, want_tag, want_sid = order[worker.wc_consumed]
+            got = self._take(worker, want_src, want_tag)
+            if got is None:
+                return None
+            worker.wc_consumed += 1
+            return got
+        got = self._take(worker, src_rank, tag)
+        if got is None:
+            return None
+        if src_rank is None and role == "cmp":
+            # record the chosen order and forward to the replica (paper §5)
+            self.wc_order[rank].append((got.src, got.tag, got.send_id))
+            worker.wc_consumed += 1
+        return got
+
+    def _take(self, worker: _Worker, src_rank: Optional[int], tag: int):
+        for i, m in enumerate(worker.inbox):
+            if (src_rank is None or m.src == src_rank) and m.tag == tag:
+                if not worker.cursor.should_deliver(m):
+                    del worker.inbox[i]
+                    self.result.duplicates_skipped += 1
+                    return self._take(worker, src_rank, tag)
+                del worker.inbox[i]
+                return m
+        return None
+
+    # --------------------------------------------------------------- failure
+
+    def _due_events(self, until: float) -> List[FailureEvent]:
+        out = []
+        while self.event_i < len(self.events) and \
+                self.events[self.event_i].time_s <= until:
+            out.append(self.events[self.event_i])
+            self.event_i += 1
+        return out
+
+    def _apply_failure(self, ev: FailureEvent):
+        victims = [w for w in ev.workers if w in self.workers]
+        if not victims:
+            return
+        self.result.failures += len(victims)
+        # interception layer -> coordinators -> propagation (paper §6.1)
+        self.coords.intercept_failure(victims)
+        try:
+            events = self.rmap.fail_many(victims)
+        except ApplicationDead:
+            # both copies dead: elastic restart from the last checkpoint
+            for w in victims:
+                self.workers.pop(w, None)
+            raise
+        for w in victims:
+            self.workers.pop(w, None)
+        promoted = [e for e in events if e["kind"] == "promote"]
+        self.result.promotions += len(promoted)
+        # drain + drop in-flight messages of the current step on promoted
+        # workers (network loss during repair), then replay from sender logs
+        self.result.time.repair += self.costs.repair_cost_s
+        self.t += self.costs.repair_cost_s
+        for e in promoted:
+            w = self.workers[e["promoted"]]
+            if self.drop_inflight:
+                w.inbox = deque(m for m in w.inbox if m.step < self.step_idx)
+            self._replay_to(w)
+
+    def _replay_to(self, worker: _Worker):
+        """Resend logged messages this worker has not consumed (paper §6.3)."""
+        role, rank = self.rmap.role_of(worker.wid)
+        have = {(m.src, m.dst, m.tag, m.send_id) for m in worker.inbox}
+        for src_rank, log in self.send_logs.items():
+            for m in log.replay_for(rank, worker.cursor.expected):
+                key = (m.src, m.dst, m.tag, m.send_id)
+                if key in have:
+                    continue
+                self._deliver(worker, copy.deepcopy(m))
+                self.result.replays += 1
+
+    # ------------------------------------------------------------------ step
+
+    def _run_step(self):
+        """Advance every alive worker through one application step."""
+        app = self.app
+        gens: Dict[int, Any] = {}
+        for w, worker in self.workers.items():
+            role, rank = self.rmap.role_of(w)
+            worker.gen = app.step(rank, worker.state, self.step_idx)
+            worker.pending = None
+            worker.done = False
+            worker.op_index = 0
+        # collective matching: key -> {rank: value}; per role group
+        contrib: Dict[Tuple, Dict[int, Any]] = {}
+
+        # failure events that land inside this step fire between passes
+        step_end = self.t + self.costs.step_time_s
+        pending_events = self._due_events(step_end)
+        pass_i = 0
+
+        def fire_events():
+            nonlocal pass_i
+            if pending_events and pass_i >= 1:
+                while pending_events:
+                    self._apply_failure(pending_events.pop(0))
+
+        while True:
+            progressed = False
+            alive = list(self.workers.items())
+            for w, worker in alive:
+                if w not in self.workers or worker.done:
+                    continue
+                role, rank = self.rmap.role_of(w)
+                # resolve pending op if satisfiable
+                send_val = _NOTHING
+                if worker.pending is None:
+                    send_val = None      # first resume
+                else:
+                    send_val = self._try_resolve(worker, contrib)
+                    if send_val is _NOTHING:
+                        continue
+                # advance the generator
+                try:
+                    op = worker.gen.send(send_val)
+                    progressed = True
+                except StopIteration as stop:
+                    worker.state = stop.value if stop.value is not None \
+                        else worker.state
+                    worker.done = True
+                    progressed = True
+                    continue
+                worker.pending = self._intake(worker, op, contrib)
+                if worker.pending is None:
+                    progressed = True
+            pass_i += 1
+            fire_events()
+            live = [x for x in self.workers.values()]
+            if all(x.done for x in live):
+                break
+            if not progressed:
+                blocked = {x.wid: x.pending for x in live if not x.done}
+                raise RuntimeError(f"deadlock at step {self.step_idx}: "
+                                   f"{blocked}")
+
+        self.t = step_end
+        if self.step_idx < self.max_step_done:
+            # re-executing work lost to a rollback (paper Fig 9 'rollback')
+            self.result.time.rollback += self.costs.step_time_s
+        else:
+            self.result.time.useful += self.costs.step_time_s
+            self.max_step_done = self.step_idx + 1
+        if self.m:
+            # replica share is redundant work (paper Fig 9 accounting is on
+            # processor-seconds: half the machine redoes the other half)
+            self.result.time.redundant += 0.0  # kept in efficiency formulas
+        self.step_idx += 1
+        self.result.steps_done = self.step_idx
+
+    def _intake(self, worker: _Worker, op: tuple, contrib) -> Optional[tuple]:
+        """Process a yielded op. Returns a pending descriptor if blocked."""
+        kind = op[0]
+        role, rank = self.rmap.role_of(worker.wid)
+        if kind == "send":
+            _, dst, tag, payload = op
+            self._route_send(worker, dst, tag, payload,
+                             log=(role == "cmp"))
+            return None
+        if kind == "exchange":
+            _, outmap, tag = op
+            for dst, payload in sorted(outmap.items()):
+                self._route_send(worker, dst, tag, payload,
+                                 log=(role == "cmp"))
+            return ("exchange_wait", sorted(outmap.keys()), tag, {})
+        if kind == "recv":
+            _, src, tag = op
+            return ("recv", src, tag)
+        if kind == "recv_any":
+            _, tag = op
+            return ("recv_any", tag)
+        if kind in ("allreduce", "barrier"):
+            idx = worker.op_index
+            worker.op_index += 1
+            if kind == "barrier":
+                key = ("barrier", self.step_idx, idx)
+                contrib.setdefault(key, {})[rank] = (role, True)
+                return ("collective", key, None)
+            _, value, redop = op
+            key = ("allreduce", self.step_idx, idx, redop)
+            contrib.setdefault(key, {})[(role, rank)] = copy.deepcopy(value)
+            return ("collective", key, redop)
+        raise ValueError(f"unknown op {kind!r}")
+
+    def _try_resolve(self, worker: _Worker, contrib):
+        """Attempt to complete worker.pending; returns _NOTHING if blocked."""
+        pend = worker.pending
+        kind = pend[0]
+        role, rank = self.rmap.role_of(worker.wid)
+        if kind == "recv":
+            _, src, tag = pend
+            m = self._match_recv(worker, src, tag)
+            if m is None:
+                return _NOTHING
+            worker.pending = None
+            return m.payload
+        if kind == "recv_any":
+            _, tag = pend
+            m = self._match_recv(worker, None, tag)
+            if m is None:
+                return _NOTHING
+            worker.pending = None
+            return (m.src, m.payload)
+        if kind == "exchange_wait":
+            _, srcs, tag, got = pend
+            for s in srcs:
+                if s not in got:
+                    m = self._match_recv(worker, s, tag)
+                    if m is not None:
+                        got[s] = m.payload
+            if len(got) < len(srcs):
+                return _NOTHING
+            worker.pending = None
+            return got
+        if kind == "collective":
+            _, key, redop = pend
+            votes = contrib.get(key, {})
+            if key[0] == "barrier":
+                have = {r for r in votes}
+                if have != set(range(self.n)):
+                    return _NOTHING
+                worker.pending = None
+                return None
+            # allreduce: cmp result from cmp contributions; rep result from
+            # rep contributions + no-rep cmp contributions (paper §5)
+            need = []
+            for r in range(self.n):
+                if role == "cmp" or self.rmap.rep[r] is None:
+                    need.append(("cmp", r))
+                else:
+                    need.append(("rep", r))
+            if any(k not in votes for k in need):
+                # promotion fallback: a promoted worker's old rep contribution
+                # counts as cmp (same value by construction)
+                missing = [k for k in need if k not in votes]
+                for mk in missing:
+                    alt = ("rep" if mk[0] == "cmp" else "cmp", mk[1])
+                    if alt not in votes:
+                        return _NOTHING
+                    votes[mk] = votes[alt]
+            vals = [votes[k] for k in need]
+            out = vals[0]
+            for v in vals[1:]:
+                if redop == "sum":
+                    out = out + v
+                elif redop == "max":
+                    out = np.maximum(out, v)
+                elif redop == "min":
+                    out = np.minimum(out, v)
+                else:
+                    raise ValueError(redop)
+            worker.pending = None
+            return out
+        raise ValueError(kind)
+
+    # ------------------------------------------------------------------- run
+
+    def run(self, n_steps: int) -> RunResult:
+        wall0 = _time.perf_counter()
+        while self.step_idx < n_steps:
+            try:
+                self._run_step()
+            except ApplicationDead:
+                self._restore_checkpoint()
+                continue
+            if self.coords.due_checkpoint(self.t) and \
+                    self.ft.mode in ("checkpoint", "combined"):
+                self._write_checkpoint()
+        self.result.states = {
+            r: self.workers[self.rmap.cmp[r]].state for r in range(self.n)}
+        self.result.wall_s = _time.perf_counter() - wall0
+        if hasattr(self.app, "check"):
+            self.result.check_value = self.app.check(self.result.states)
+        return self.result
+
+
+class _Nothing:
+    __repr__ = lambda self: "<NOTHING>"
+
+
+_NOTHING = _Nothing()

@@ -1,0 +1,86 @@
+"""Checkpoint I/O: banded roundtrip, extended dtypes, elastic restore,
+atomicity (paper §3.1, §3.3)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (16, 8), jnp.float32)
+                   .astype(jnp.bfloat16),
+                   "b": jnp.zeros((8,), jnp.float32)},
+        "opt": {"m": jnp.ones((16, 8), jnp.float32)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip_bf16_banded(tmp_path):
+    ck = Checkpointer(str(tmp_path), n_bands=4)
+    st = _state()
+    ck.save(7, st)
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), st)
+    got, step, extra = ck.restore(like)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_baseline_plus_incremental(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    st = _state()
+    ck.save(0, st, baseline=True)
+    assert ck.latest_tag() is None          # baseline is not LATEST
+    ck.save(5, st)
+    assert ck.latest_tag() == "step_00000005"
+    assert ck.latest_step() == 5
+    got, step, _ = ck.restore(st, tag="baseline")
+    assert step == 0
+
+
+def test_elastic_band_subset_reads(tmp_path):
+    """A reader that owns only some bands can fetch its slice; the union of
+    all bands reconstructs the global arrays (different worker counts for
+    write and read, paper §3.3)."""
+    ck = Checkpointer(str(tmp_path), n_bands=4)
+    st = {"w": jnp.arange(32 * 3, dtype=jnp.float32).reshape(32, 3)}
+    ck.save(1, st)
+    got, _, _ = ck.restore(st, bands=[0, 1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(st["w"]))
+    # band files exist per writer
+    files = os.listdir(os.path.join(str(tmp_path), "step_00000001"))
+    assert sum(f.startswith("band_") for f in files) == 4
+
+
+def test_atomic_latest_pointer(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    st = _state()
+    ck.save(1, st)
+    ck.save(2, st)
+    assert ck.latest_step() == 2
+    # a torn write must not be visible: simulate by checking tmp dirs gone
+    assert not any(f.startswith(".tmp") for f in os.listdir(str(tmp_path)))
+
+
+def test_gc_keeps_newest(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    st = _state()
+    for s in (1, 2, 3, 4):
+        ck.save(s, st)
+    ck.gc(keep=2)
+    tags = sorted(t for t in os.listdir(str(tmp_path))
+                  if t.startswith("step_"))
+    assert tags == ["step_00000003", "step_00000004"]
+
+
+def test_measured_write_time_feeds_young_daly(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    dt = ck.save(1, _state())
+    assert dt > 0 and ck.last_write_s == dt

@@ -1,0 +1,73 @@
+"""Young-Daly / Daly / replication-MTTI model tests (paper Table 1, §7)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ckpt_policy as cp
+from repro.core.failure_sim import empirical_pair_mtti
+
+# the paper's Table 1, exactly
+TABLE1 = [
+    ("HPCG", 1024, 16000, 46, 1213.26),
+    ("HPCG", 2048, 8000, 65, 1019.80),
+    ("HPCG", 4096, 4000, 114, 954.98),
+    ("HPCG", 8192, 2000, 215, 927.36),
+    ("CloverLeaf", 2048, 2000, 44, 419.52),
+    ("CloverLeaf", 4096, 1000, 45, 300.00),
+    ("CloverLeaf", 8192, 500, 42, 204.93),
+    ("PIC", 2048, 2000, 66, 513.81),
+    ("PIC", 4096, 1000, 63, 354.96),
+    ("PIC", 8192, 500, 60, 244.94),
+]
+
+
+@pytest.mark.parametrize("app,procs,mu,c,expected", TABLE1)
+def test_young_daly_matches_paper_table1(app, procs, mu, c, expected):
+    assert cp.young_daly_interval(mu, c) == pytest.approx(expected, abs=0.01)
+
+
+@given(mu=st.floats(10, 1e6), c=st.floats(0.1, 500))
+@settings(max_examples=100, deadline=None)
+def test_young_daly_is_the_waste_minimum(mu, c):
+    """tau* minimizes first-order waste C/tau + tau/(2 mu) numerically."""
+    tau_star = cp.young_daly_interval(mu, c)
+
+    def waste(tau):
+        return c / tau + tau / (2 * mu)
+
+    for tau in (tau_star * 0.7, tau_star * 1.3):
+        assert waste(tau_star) <= waste(tau) + 1e-12
+
+
+def test_daly_close_to_young_daly_when_c_small():
+    assert cp.daly_interval(16000, 46) == pytest.approx(
+        cp.young_daly_interval(16000, 46), rel=0.08)
+
+
+def test_efficiency_decreases_with_failure_rate():
+    effs = [cp.ckpt_efficiency(mu, 100, 60) for mu in (16000, 8000, 4000,
+                                                       2000, 1000)]
+    assert all(a > b for a, b in zip(effs, effs[1:]))
+
+
+def test_replication_mtti_birthday_scaling():
+    # MTTI ~ 1/sqrt(n): doubling pairs divides MTTI by sqrt(2)
+    m1 = cp.replication_mtti(1e6, 512)
+    m2 = cp.replication_mtti(1e6, 2048)
+    assert m1 / m2 == pytest.approx(2.0, rel=1e-6)
+
+
+@pytest.mark.parametrize("n_pairs", [8, 64])
+def test_replication_mtti_matches_monte_carlo(n_pairs):
+    proc_mtbf = 1000.0 * n_pairs * 2       # keep event counts reasonable
+    analytic = cp.replication_mtti(proc_mtbf, n_pairs)
+    empirical = empirical_pair_mtti(proc_mtbf, n_pairs, trials=300, seed=1)
+    assert analytic == pytest.approx(empirical, rel=0.25)
+
+
+def test_crossover_exists_and_is_beyond_base():
+    cross = cp.crossover_processes(1024, 16000, 46, 3 * 3600)
+    assert cross > 1024       # replication should NOT win at small scale
+    assert cross <= 1024 * 2 ** 12

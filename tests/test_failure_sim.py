@@ -1,0 +1,56 @@
+"""Failure injectors: Weibull statistics + node-level log replay."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.failure_sim import (LogReplayInjector, WeibullInjector,
+                                    synth_tsubame_log)
+
+
+def test_weibull_mean_matches_mtbf():
+    inj = WeibullInjector(mtbf_s=2000.0, shape=0.7, seed=3)
+    draws = [inj.draw_interval() for _ in range(20000)]
+    assert np.mean(draws) == pytest.approx(2000.0, rel=0.05)
+
+
+def test_weibull_shape_burstier_than_exponential():
+    """shape<1 => CV > 1 (bursty, like real failure traces)."""
+    inj = WeibullInjector(2000.0, shape=0.7, seed=0)
+    d = np.array([inj.draw_interval() for _ in range(20000)])
+    cv = d.std() / d.mean()
+    assert cv > 1.1
+
+
+def test_schedule_within_horizon():
+    inj = WeibullInjector(10.0, seed=1)
+    ev = inj.schedule(100.0, alive_workers=range(8))
+    assert all(0 < e.time_s < 100.0 for e in ev)
+    assert all(0 <= e.workers[0] < 8 for e in ev)
+    assert len(ev) > 2
+
+
+def test_log_replay_node_mapping_and_scale():
+    log = [(0.0, "nodeA"), (1000.0, "nodeB"), (2000.0, "nodeA")]
+    inj = LogReplayInjector(log, workers_per_node=4, n_workers=8,
+                            time_scale=0.01)
+    ev = inj.schedule(1e9)
+    assert len(ev) == 3
+    assert ev[1].time_s == pytest.approx(10.0)
+    # same node name -> same worker set (repeated-node failures, Fig 13)
+    assert ev[0].workers == ev[2].workers
+    assert len(ev[0].workers) == 4
+    assert inj.mtbf_s == pytest.approx(10.0)
+
+
+def test_synth_tsubame_log_statistics():
+    log = synth_tsubame_log(n_nodes=64, n_events=200, mtbf_target_s=2308.0)
+    times = [t for t, _ in log]
+    gaps = np.diff(times)
+    assert np.mean(gaps) == pytest.approx(2308.0, rel=1e-6)
+    # heavy-tailed node counts: the most frequent node fails many times
+    from collections import Counter
+    counts = Counter(n for _, n in log)
+    assert counts.most_common(1)[0][1] >= 5
+    # bursty: some gaps far below the mean
+    assert (gaps < 0.1 * 2308).mean() > 0.1

@@ -1,0 +1,140 @@
+"""FT theorem for LM training + the production runtime pieces
+(virtual mesh, shrink planner, coordinators)."""
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FTConfig
+from repro.core.coordinator import ClusterTopology, CoordinatorSet
+from repro.core.replica_map import ReplicaMap
+from repro.core.shrink import plan_recovery
+from repro.core.virtual_mesh import ExecutableCache, VirtualMesh
+from repro.launch.train import build_trainer
+
+STEPS = 12
+
+
+def _final_params(report):
+    return [np.asarray(x, np.float32)
+            for x in jax.tree.leaves(report.final_state["params"])]
+
+
+@pytest.fixture(scope="module")
+def clean_run():
+    tr = build_trainer("xlstm-350m", reduced=True, batch=4, seq=32,
+                       ft=FTConfig(mode="none"), kill_schedule={})
+    return tr.run(STEPS)
+
+
+def test_ft_theorem_promotion(clean_run):
+    """Kill the computational slice mid-training: the promoted replica must
+    continue to a bitwise-identical result."""
+    with tempfile.TemporaryDirectory() as d:
+        tr = build_trainer("xlstm-350m", reduced=True, batch=4, seq=32,
+                           ft=FTConfig(mode="replication"),
+                           ckpt_dir=d, kill_schedule={5: [0]})
+        rep = tr.run(STEPS)
+    assert rep.promotions == 1 and rep.restarts == 0
+    for a, b in zip(_final_params(rep), _final_params(clean_run)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ft_theorem_pair_death_restart(clean_run):
+    """Kill a cmp slice and then its promoted replica: elastic restart from
+    the checkpoint must still land on the identical final params."""
+    with tempfile.TemporaryDirectory() as d:
+        tr = build_trainer("xlstm-350m", reduced=True, batch=4, seq=32,
+                           ft=FTConfig(mode="combined", ckpt_interval_s=4.0),
+                           ckpt_dir=d, kill_schedule={4: [1], 8: [9]})
+        rep = tr.run(STEPS)
+    assert rep.restarts == 1 and rep.rolled_back_steps > 0
+    for a, b in zip(_final_params(rep), _final_params(clean_run)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ft_theorem_pure_checkpoint(clean_run):
+    with tempfile.TemporaryDirectory() as d:
+        tr = build_trainer("xlstm-350m", reduced=True, batch=4, seq=32,
+                           ft=FTConfig(mode="checkpoint",
+                                       ckpt_interval_s=3.0),
+                           ckpt_dir=d, kill_schedule={7: [2]})
+        rep = tr.run(STEPS)
+    assert rep.restarts == 1
+    for a, b in zip(_final_params(rep), _final_params(clean_run)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------- virtual mesh
+
+def test_virtual_mesh_spare_fill():
+    vm = VirtualMesh((2, 4), ("data", "model"), n_spares=2)
+    dev = vm.slots[3]
+    ev = vm.fail_devices([dev])
+    assert ev.kind == "spare_fill"
+    assert dev not in vm.slots and len(vm.slots) == 8
+    assert len(set(vm.slots)) == 8
+
+
+def test_virtual_mesh_shrink_dp_when_no_spares():
+    vm = VirtualMesh((4, 2), ("data", "model"), n_spares=0)
+    ev = vm.fail_devices([vm.slots[0]])
+    assert ev.kind == "shrink_dp" and ev.new_dp == 3
+    assert vm.shape == (3, 2)
+    # the healthy device from the dropped slice became a spare
+    assert len(vm.spares) == 1
+    # a later failure can now spare-fill
+    ev2 = vm.fail_devices([vm.slots[0]])
+    assert ev2.kind == "spare_fill"
+    assert vm.shape == (3, 2)
+
+
+def test_virtual_mesh_fatal_when_everything_dies():
+    vm = VirtualMesh((1, 2), ("data", "model"))
+    ev = vm.fail_devices(list(vm.slots))
+    assert ev.kind == "fatal"
+
+
+def test_executable_cache_hits():
+    vm = VirtualMesh((4, 2), ("data", "model"))
+    cache = ExecutableCache()
+    calls = []
+    exe1 = cache.get_or_compile(vm, "train", lambda: calls.append(1) or "A")
+    exe2 = cache.get_or_compile(vm, "train", lambda: calls.append(1) or "B")
+    assert exe1 == exe2 == "A" and len(calls) == 1
+    assert cache.hits == 1 and cache.misses == 1
+
+
+# ---------------------------------------------------------------- shrink plan
+
+def test_plan_recovery_promote():
+    rm = ReplicaMap(4, 4)
+    rm2, plan = plan_recovery(rm, [0], last_ckpt_step=3, current_step=9)
+    assert plan.kind == "promote" and not plan.needs_restore
+    assert rm2.cmp[0] == 4
+
+
+def test_plan_recovery_elastic_restart():
+    rm = ReplicaMap(4, 4)
+    rm, p1 = plan_recovery(rm, [0], last_ckpt_step=3, current_step=9)
+    rm2, plan = plan_recovery(rm, [4], last_ckpt_step=3, current_step=9)
+    assert plan.kind == "restart_elastic"
+    assert plan.rollback_to_step == 3 and plan.needs_restore
+    rm2.check_invariants()
+
+
+# --------------------------------------------------------------- coordinators
+
+def test_coordinator_propagation_and_timer():
+    topo = ClusterTopology(8, 2)
+    cs = CoordinatorSet(topo, ckpt_interval_s=10.0)
+    fresh = cs.intercept_failure([5])
+    assert fresh == [5]
+    assert all(5 in c.known_dead for c in cs.coordinators)
+    assert cs.intercept_failure([5]) == []        # dedup
+    assert not cs.due_checkpoint(9.9)
+    assert cs.due_checkpoint(10.1)
+    cs.restart_timer(10.1)
+    assert not cs.due_checkpoint(15.0)
+    assert cs.due_checkpoint(20.2)

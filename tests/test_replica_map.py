@@ -1,0 +1,105 @@
+"""Replica-map algebra: unit + property tests (paper §3.2, §6.2)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.replica_map import ApplicationDead, ReplicaMap
+
+
+def test_initial_groups():
+    rm = ReplicaMap(4, 2)
+    assert rm.cmp_group() == [0, 1, 2, 3]
+    assert rm.rep_group() == [4, 5]
+    assert rm.no_rep_group() == [2, 3]
+    assert rm.world_size == 6
+    assert rm.replication_degree() == 0.5
+    rm.check_invariants()
+
+
+def test_replica_death_dropped():
+    rm = ReplicaMap(4, 4)
+    ev = rm.fail(5)
+    assert ev["kind"] == "drop_replica" and ev["rank"] == 1
+    assert rm.rep[1] is None
+    rm.check_invariants()
+
+
+def test_cmp_death_promotes():
+    rm = ReplicaMap(4, 4)
+    ev = rm.fail(1)
+    assert ev["kind"] == "promote" and ev["promoted"] == 5
+    assert rm.cmp[1] == 5 and rm.rep[1] is None
+    rm.check_invariants()
+
+
+def test_pair_death_raises():
+    rm = ReplicaMap(4, 4)
+    rm.fail(1)          # promote 5
+    with pytest.raises(ApplicationDead):
+        rm.fail(5)      # no replica left for rank 1
+
+
+def test_unreplicated_death_raises():
+    rm = ReplicaMap(4, 2)
+    with pytest.raises(ApplicationDead):
+        rm.fail(3)      # rank 3 has no replica
+
+
+def test_node_failure_simultaneous():
+    # killing a cmp worker AND its replica in one event is fatal
+    rm = ReplicaMap(2, 2)
+    with pytest.raises(ApplicationDead):
+        rm.fail_many([0, 2])
+
+
+def test_node_failure_survivable():
+    rm = ReplicaMap(4, 4)
+    events = rm.fail_many([0, 1])       # two cmp workers, replicas alive
+    assert all(e["kind"] == "promote" for e in events)
+    rm.check_invariants()
+    assert rm.cmp_group() == [4, 5, 2, 3]
+
+
+def test_restart_map_elastic():
+    rm = ReplicaMap(4, 4)
+    rm.fail(0)
+    # restart with fewer workers -> lower replication degree
+    nm = rm.restart_map(6)
+    assert nm.n == 4 and nm.m == 2
+    nm.check_invariants()
+    with pytest.raises(ValueError):
+        rm.restart_map(3)               # cannot host 4 ranks on 3 workers
+
+
+@given(n=st.integers(1, 12), m_frac=st.floats(0, 1),
+       kills=st.lists(st.integers(0, 23), max_size=16))
+@settings(max_examples=200, deadline=None)
+def test_invariants_under_arbitrary_failures(n, m_frac, kills):
+    """Whatever the kill sequence, either invariants hold or the map
+    correctly reports application death (never a corrupt state)."""
+    m = int(round(m_frac * n))
+    rm = ReplicaMap(n, m)
+    for k in kills:
+        w = k % rm.world_size
+        try:
+            rm.fail(w)
+        except ApplicationDead:
+            return
+        rm.check_invariants()
+        # exactly one computational worker per rank, all alive
+        cmp = rm.cmp_group()
+        assert len(set(cmp)) == n
+        assert not (set(cmp) & rm.dead)
+
+
+@given(n=st.integers(2, 10))
+@settings(max_examples=50, deadline=None)
+def test_full_replication_survives_n_cmp_deaths(n):
+    """With full replication, killing every original exactly once is
+    always survivable (each rank promotes its replica)."""
+    rm = ReplicaMap(n, n)
+    for w in range(n):
+        ev = rm.fail(w)
+        assert ev["kind"] == "promote"
+    assert rm.promotions == n
+    assert rm.rep_group() == []
+    rm.check_invariants()

@@ -1,0 +1,139 @@
+"""Sharding rules: divisibility-safe specs for every arch + hypothesis
+properties; data pipeline determinism; HLO cost analyzer ground truths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCHS, DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K
+from repro.data import DataConfig, ShardedSource, TokenSource
+from repro.distributed import sharding as sh
+from repro.launch import hlo_cost
+from repro.models import abstract_cache, abstract_state, input_specs
+
+
+def _fake_mesh_axes():
+    return {"data": 16, "model": 16}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_specs_divisible(arch):
+    """Every sharded dim must divide by its mesh axis (the rule engine's
+    fallback contract) — checked for all 10 archs on the 16x16 mesh."""
+    axes = _fake_mesh_axes()
+    abstract = abstract_state(ARCHS[arch])
+    flat = jax.tree_util.tree_flatten_with_path(abstract)[0]
+    n_sharded = 0
+    for path, leaf in flat:
+        spec = sh.param_pspec(path, leaf, axes)
+        assert len(spec) <= len(leaf.shape)
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is not None:
+                size = axes[ax] if isinstance(ax, str) else \
+                    int(np.prod([axes[a] for a in ax]))
+                assert dim % size == 0, (arch, path, leaf.shape, spec)
+                n_sharded += 1
+    assert n_sharded > 0, f"{arch}: nothing sharded at all"
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("shape", [DECODE_32K, LONG_500K])
+def test_cache_specs_divisible(arch, shape):
+    cfg = ARCHS[arch]
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        pytest.skip("full-attention arch skips long_500k")
+    axes = _fake_mesh_axes()
+    cache = abstract_cache(cfg, shape)
+    flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+    for path, leaf in flat:
+        spec = sh.cache_pspec(path, leaf, axes, shape.global_batch)
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            size = axes[ax] if isinstance(ax, str) else \
+                int(np.prod([axes[a] for a in ax]))
+            assert dim % size == 0, (arch, path, leaf.shape, spec)
+
+
+def test_input_pspec_batch_sharding():
+    mesh_axes = {"pod": 2, "data": 16, "model": 16}
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+
+        class devices:
+            shape = (2, 16, 16)
+
+    m = FakeMesh()
+    assert sh.input_pspec((256, 4096), m) == P(("pod", "data"), None)
+    # paper replication mode: pod axis excluded everywhere
+    assert sh.input_pspec((256, 4096), m, "pod") == P(("data",), None)
+    # indivisible batch: replicate
+    assert sh.input_pspec((3, 64), m) == P(None, None)
+
+
+@given(vocab=st.integers(100, 1000), n_workers=st.sampled_from([1, 2, 4, 8]),
+       step=st.integers(0, 500))
+@settings(max_examples=40, deadline=None)
+def test_data_pipeline_seekable_and_elastic(vocab, n_workers, step):
+    """batch_at(step) is pure; re-sharding to a different worker count
+    partitions the SAME global stream (elastic restart contract)."""
+    src = TokenSource(DataConfig(vocab_size=vocab, seq_len=16,
+                                 global_batch=8, seed=3))
+    a = src.host_batch_at(step)
+    b = src.host_batch_at(step)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].max() < vocab
+    parts = [ShardedSource(src, w, n_workers).batch_at(step)["tokens"]
+             for w in range(n_workers)]
+    merged = np.empty_like(a["tokens"])
+    for w in range(n_workers):
+        merged[w::n_workers] = parts[w]
+    np.testing.assert_array_equal(merged, a["tokens"])
+
+
+# ------------------------------------------------------------- hlo cost truth
+
+def test_hlo_cost_counts_scan_trips():
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def one(w, x):
+        return x @ w
+
+    def scanned(w, x):
+        def body(c, _):
+            return c @ w, None
+        y, _ = lax.scan(body, x, None, length=7)
+        return y
+
+    r1 = hlo_cost.analyze(jax.jit(one).lower(w, x).compile().as_text())
+    r7 = hlo_cost.analyze(jax.jit(scanned).lower(w, x).compile().as_text())
+    exact = 2 * 256 ** 3
+    assert r1.flops == pytest.approx(exact, rel=0.05)
+    assert r7.flops == pytest.approx(7 * exact, rel=0.05)
+
+
+def test_hlo_cost_grad_of_scan_is_3x_fwd():
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def train(w, x):
+        def loss(w):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            y, _ = lax.scan(body, x, None, length=6)
+            return jnp.sum(y * y)
+        return jax.grad(loss)(w)
+
+    r = hlo_cost.analyze(jax.jit(train).lower(w, x).compile().as_text())
+    fwd = 6 * 2 * 128 ** 3
+    assert 2.0 < r.flops / fwd < 4.5
+
+
+def test_collective_stats_from_spmd_module():
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (run under the dry-run env)")
