@@ -1,0 +1,21 @@
+# Repo checks. `make test` is the tier-1 command from ROADMAP.md.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test lint check bench
+
+test:
+	$(PY) -m pytest -x -q
+
+# lint: syntax/bytecode check everywhere (no external linter is baked into
+# the container); flake8 runs additionally when available.
+lint:
+	$(PY) -m compileall -q src tests examples benchmarks
+	@$(PY) -c "import flake8" 2>/dev/null \
+	    && $(PY) -m flake8 --max-line-length 100 src tests \
+	    || echo "flake8 not installed; compileall-only lint"
+
+check: lint test
+
+bench:
+	$(PY) benchmarks/run.py

@@ -6,7 +6,7 @@ work, so any loss is interception + replica-communication overhead
 (paper: 1.3%).
 
 Here (real wall-clock measurement): the SAME jitted LM train step, warm,
-driven (a) by a bare Python loop and (b) by FTTrainer with the full FT
+driven (a) by a bare Python loop and (b) by FTSession with the full FT
 machinery active (coordinators, failure polling, replica-map bookkeeping,
 deterministic data cursor) but no failures, no checkpoints, and the
 replica slice's redundant compute excluded on both sides — exactly the
@@ -15,31 +15,32 @@ not to the library."""
 import time
 
 from repro.configs.base import FTConfig
-from repro.launch.train import build_trainer
+from repro.launch.train import build_session
 
 
 def run() -> list:
     t0 = time.perf_counter()
     steps, warm = 40, 6
-    tr = build_trainer("codeqwen1.5-7b", reduced=True, batch=4, seq=64,
-                       ft=FTConfig(mode="replication"), kill_schedule={})
-    tr.simulate_replica = False          # redundancy excluded (see above)
+    session, workload = build_session(
+        "codeqwen1.5-7b", reduced=True, batch=4, seq=64,
+        ft=FTConfig(mode="replication"))
+    session.simulate_replica = False     # redundancy excluded (see above)
 
     # warm the jit cache on the exact step fn both paths share
-    state = tr.init_state()
+    state = workload.init_state()
     for i in range(warm):
-        state, _ = tr.train_step(state, tr.batch_fn(i))
+        state, _ = workload.step(state, i)
 
     def bare():
-        s = tr.init_state()
+        s = workload.init_state()
         t = time.perf_counter()
         for i in range(steps):
-            s, _ = tr.train_step(s, tr.batch_fn(i))
+            s, _ = workload.step(s, i)
         return time.perf_counter() - t
 
     def ft():
         t = time.perf_counter()
-        tr.run(steps)
+        session.run(workload, steps)
         return time.perf_counter() - t
 
     bare_s = min(bare() for _ in range(3))

@@ -1,8 +1,10 @@
 """Serving example: batched generation with mid-decode failover.
 
-Generates from two replicated model slices; kills the computational slice
-after 8 tokens and verifies the promoted replica continues the exact same
-token stream (its KV cache is current — the paper's no-rollback recovery).
+Generates from two replicated model slices via the unified ``repro.ft``
+API (the decode loop is a DecodeWorkload driven by FTSession); kills the
+computational slice after 8 tokens and verifies the promoted replica
+continues the exact same token stream (its KV cache is current — the
+paper's no-rollback recovery).
 
   PYTHONPATH=src python examples/serve_with_failover.py
 """
@@ -27,8 +29,10 @@ faulty = ReplicatedServer("qwen3-8b", batch=BATCH, prompt_len=PLEN,
 t_fail = faulty.generate(prompts, GEN, kill_at=8)
 
 assert np.array_equal(t_clean, t_fail), "failover changed generation!"
+events = [(e.step, e.kind) for e in faulty.last_report.events]
 print(f"generated {t_fail.shape} tokens; failover after 8 tokens "
-      f"(promotions={faulty.promotions}) produced an identical stream.")
+      f"(promotions={faulty.promotions}, events={events}) produced an "
+      f"identical stream.")
 
 # without replication the same failure is fatal
 try:

@@ -3,10 +3,11 @@ under the unified FT framework (checkpoint + replication), with injected
 failures, and verify the FT theorem: final parameters match a failure-free
 run exactly.
 
-This is the training analogue of the paper's HPCG experiments: the replica
-slice redundantly executes every step; a computational-slice kill promotes
-the replica (no rollback); a pair-death falls back to the last Young-Daly
-checkpoint.
+This is the training analogue of the paper's HPCG experiments, driven
+through the unified ``repro.ft`` API (FTSession + TrainWorkload): the
+replica slice redundantly executes every step; a computational-slice kill
+promotes the replica (no rollback); a pair-death falls back to the last
+Young-Daly checkpoint.
 
   PYTHONPATH=src python examples/train_lm_ft.py [--steps 200]
 """
@@ -19,7 +20,7 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.configs.base import FTConfig
-from repro.launch.train import build_trainer
+from repro.launch.train import build_session
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=200)
@@ -34,20 +35,20 @@ kills = {args.steps // 4: [0],                  # cmp slice dies -> promote
 
 with tempfile.TemporaryDirectory() as d:
     ft = FTConfig(mode="combined", mtbf_s=1e9, ckpt_interval_s=25.0)
-    faulty = build_trainer(args.arch, reduced=True, batch=8, seq=128,
-                           ft=ft, ckpt_dir=d, kill_schedule=dict(kills),
-                           n_logical_workers=8)
-    rep_f = faulty.run(args.steps)
+    session, workload = build_session(
+        args.arch, reduced=True, batch=8, seq=128, ft=ft, ckpt_dir=d,
+        kill_schedule=dict(kills), n_logical_workers=8)
+    rep_f = session.run(workload, args.steps)
 
-clean = build_trainer(args.arch, reduced=True, batch=8, seq=128,
-                      ft=FTConfig(mode="none"), ckpt_dir=None,
-                      kill_schedule={})
-rep_c = clean.run(args.steps)
+clean_session, clean_workload = build_session(
+    args.arch, reduced=True, batch=8, seq=128, ft=FTConfig(mode="none"))
+rep_c = clean_session.run(clean_workload, args.steps)
 
 print(f"faulty : steps={rep_f.steps} failures={rep_f.failures} "
       f"promotions={rep_f.promotions} restarts={rep_f.restarts} "
       f"ckpts={rep_f.ckpt_writes} loss={rep_f.losses[-1]:.5f}")
 print(f"clean  : steps={rep_c.steps} loss={rep_c.losses[-1]:.5f}")
+print("event stream:", [(e.step, e.kind) for e in rep_f.events])
 
 import jax
 fa = jax.tree.leaves(rep_f.final_state["params"])

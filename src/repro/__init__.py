@@ -2,13 +2,21 @@
 native runtime (XLA/JAX), after Joshi & Vadhiyar, "FTHP-MPI" (2025).
 
 Layers:
-  repro.core        - the paper's contribution (replication + ckpt/restart FT)
+  repro.ft          - THE unified FT API: Workload / FTStrategy /
+                      FailureInjector / FTSession (see docs/ft_api.md)
+  repro.core        - the paper's mechanisms the FT layer is built from
+                      (replica map, coordinators, message log, recovery
+                      planner, Young-Daly policy; FTTrainer compat shim)
   repro.models      - all 10 assigned architectures
   repro.kernels     - Pallas TPU kernels (flash attention, rmsnorm, mamba scan)
   repro.distributed - sharding rules, replica-aware collectives
-  repro.simrt       - multi-worker failure-injection runtime (CPU, real numerics)
-  repro.apps        - HPCG / CloverLeaf / PIC reproductions
-  repro.launch      - production mesh, dry-run, train/serve drivers
+  repro.simrt       - multi-worker failure-injection runtime (CPU, real
+                      numerics, message-level replication; consumes the same
+                      FailureInjector interface)
+  repro.apps        - HPCG / CloverLeaf / PIC reproductions (run on simrt or
+                      through repro.ft.SimAppWorkload)
+  repro.launch      - production mesh, dry-run, train/serve drivers (both
+                      drive FTSession)
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"

@@ -8,5 +8,5 @@ Modules:
   shrink        - recovery planner (promote / elastic restart)
   virtual_mesh  - logical->physical device map hiding failures from XLA
   ckpt_policy   - Young-Daly / Daly / replication-MTTI efficiency models
-  ft_runtime    - FTTrainer: the production step-loop integration
+  ft_runtime    - FTTrainer: compat shim over the unified repro.ft API
 """

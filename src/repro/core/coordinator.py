@@ -93,11 +93,34 @@ class CoordinatorSet:
             Coordinator(n, topology, ckpt_interval_s, primary=(n == 0))
             for n in range(topology.n_nodes)]
         self.propagations = 0
+        self.dead_nodes: Set[int] = set()
+        self._primary_idx = 0
 
     @property
     def primary(self) -> Coordinator:
         # primary migrates to the first node that still has live coordinators
-        return self.coordinators[0]
+        return self.coordinators[self._primary_idx]
+
+    def _node_dead(self, node: int) -> bool:
+        """A node's coordinator dies with its node: every local worker dead."""
+        c = self.coordinators[node]
+        return bool(c.local_workers) and c.local_workers <= c.known_dead
+
+    def _migrate_primary(self):
+        """Transfer the checkpoint timer to the first live coordinator
+        (paper §3.1: a single primary owns the periodic timer)."""
+        old = self.coordinators[self._primary_idx]
+        for c in self.coordinators:
+            if c.node not in self.dead_nodes:
+                if c is old:
+                    return
+                c.primary = True
+                c.ckpt_interval_s = old.ckpt_interval_s
+                c.next_ckpt_s = old.next_ckpt_s
+                old.primary = False
+                self._primary_idx = c.node
+                return
+        # every node dead: keep the stale primary (job is over anyway)
 
     def intercept_failure(self, workers: Sequence[int]) -> List[int]:
         """Entry point of the interception layer: route each dead worker to
@@ -114,6 +137,11 @@ class CoordinatorSet:
             for c in self.coordinators:
                 c.known_dead.update(fresh_all)
             self.propagations += 1
+            for node in by_node:
+                if self._node_dead(node):
+                    self.dead_nodes.add(node)
+            if self._primary_idx in self.dead_nodes:
+                self._migrate_primary()
         return fresh_all
 
     def due_checkpoint(self, now_s: float) -> bool:

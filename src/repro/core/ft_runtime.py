@@ -1,71 +1,40 @@
-"""FTTrainer: the paper's unified FT framework wrapped around a jitted
-train step — the production-facing integration (launch/train.py drives it).
+"""FTTrainer: backwards-compatible shim over the unified ``repro.ft`` API.
 
-Modes (FTConfig.mode):
-  none         native step loop (the "EMPI direct" baseline of Fig 10)
-  checkpoint   coordinated checkpoint/restart at the Young-Daly interval
-  replication  a replica slice redundantly executes every step; on
-               computational-slice failure the replica is promoted in O(1)
-               (state is already current — no restore, no rollback)
-  combined     both (checkpoints guard against pair deaths)
+Historically this module owned the production FT step loop.  That logic now
+lives in ``repro.ft`` (Workload / FTStrategy / FailureInjector / FTSession)
+so training, serving and app simulations share one implementation; see
+docs/ft_api.md for the contracts and the migration guide.
 
-On a real multi-pod mesh the replica slice is pod 1 (DESIGN.md §4) and
-promotion is a VirtualMesh relabel. On this container both slices live on
-the same device; the trainer executes the replica step redundantly when
-``simulate_replica`` — which preserves the exact semantics (bit-identical
-states, O(1) promotion) at 2x local cost, and lets the FT-theorem tests
-compare failure runs against failure-free runs for equality.
+FTTrainer is kept so existing callers keep working unchanged:
 
-Failures are injected logically (by step index or by a Weibull/log-replay
-schedule against virtual time) through the same coordinator fabric as simrt.
+    trainer = FTTrainer(train_step=..., init_state=..., batch_fn=...,
+                        ft=FTConfig(mode="combined"), ckpt_dir=...,
+                        kill_schedule={5: [0]})
+    report = trainer.run(n_steps)       # -> RunReport (== old TrainReport)
+
+New code should build an ``FTSession`` + ``TrainWorkload`` directly
+(``repro.launch.train.build_session`` does exactly that).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
-import jax
-import numpy as np
-
-from repro.checkpoint import Checkpointer
 from repro.configs.base import FTConfig
-from repro.core import ckpt_policy
-from repro.core.coordinator import ClusterTopology, CoordinatorSet
-from repro.core.replica_map import ReplicaMap
-from repro.core.shrink import plan_recovery
+from repro.ft.session import FTSession, RunReport, StepEvent, TrainReport
+from repro.ft.workload import TrainWorkload, copy_tree
 
+# Old import sites (`from repro.core.ft_runtime import _copy_tree`) keep
+# working; the canonical name is repro.ft.workload.copy_tree.
+_copy_tree = copy_tree
 
-def _copy_tree(tree):
-    """Deep device copy — replica state must own its buffers (the cmp step
-    donates its inputs; aliased buffers would be invalidated)."""
-    return jax.tree.map(lambda x: x.copy() if hasattr(x, "copy") else x, tree)
-
-
-@dataclass
-class StepEvent:
-    step: int
-    kind: str
-    detail: dict = field(default_factory=dict)
-
-
-@dataclass
-class TrainReport:
-    steps: int = 0
-    losses: List[float] = field(default_factory=list)
-    events: List[StepEvent] = field(default_factory=list)
-    failures: int = 0
-    promotions: int = 0
-    restarts: int = 0
-    ckpt_writes: int = 0
-    rolled_back_steps: int = 0
-    wall_s: float = 0.0
-    ckpt_s: float = 0.0
-    restore_s: float = 0.0
-    final_state: Any = None
+__all__ = ["FTTrainer", "TrainReport", "RunReport", "StepEvent",
+           "_copy_tree"]
 
 
 class FTTrainer:
+    """Thin adapter: (train_step, init_state, batch_fn) -> TrainWorkload,
+    (ft, kill_schedule, ...) -> FTSession."""
+
     def __init__(self, *, train_step: Callable, init_state: Callable,
                  batch_fn: Callable[[int], dict], ft: FTConfig,
                  ckpt_dir: Optional[str] = None,
@@ -79,114 +48,36 @@ class FTTrainer:
         kill_schedule: {step_idx: [worker ids]} — logical workers map onto
         DP slices; in replication mode workers [n/2:) are the replica slice.
         """
+        self.workload = TrainWorkload(train_step=train_step,
+                                      init_state=init_state,
+                                      batch_fn=batch_fn)
+        self.session = FTSession(ft=ft, ckpt_dir=ckpt_dir,
+                                 injector=dict(kill_schedule or {}),
+                                 n_logical_workers=n_logical_workers,
+                                 workers_per_node=workers_per_node,
+                                 simulate_replica=simulate_replica,
+                                 step_time_s=step_time_s)
+        self.ft = ft
+        # legacy attribute surface
         self.train_step = train_step
         self.init_state = init_state
         self.batch_fn = batch_fn
-        self.ft = ft
-        self.simulate_replica = simulate_replica and \
-            ft.mode in ("replication", "combined")
-        n = n_logical_workers
-        m = int(round(ft.replication_degree * n)) \
-            if ft.mode in ("replication", "combined") else 0
-        self.rmap = ReplicaMap(n, m)
-        self.topology = ClusterTopology(self.rmap.world_size,
-                                        workers_per_node)
-        self.kill_schedule = kill_schedule or {}
-        self.step_time_s = step_time_s
-        self.ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
-        self.coords = CoordinatorSet(self.topology, float("inf"))
-        self._interval_set = False
 
-    # -- helpers ---------------------------------------------------------------
+    @property
+    def simulate_replica(self) -> bool:
+        return self.session.simulate_replica
 
-    def _maybe_set_interval(self, measured_c: float, now: float):
-        if self._interval_set or self.ft.mode not in ("checkpoint", "combined"):
-            return
-        c = self.ft.ckpt_cost_s or max(measured_c, 1e-6)
-        interval = self.ft.ckpt_interval_s or \
-            ckpt_policy.young_daly_interval(self.ft.mtbf_s, c)
-        self.coords.set_interval(interval, now)
-        self._interval_set = True
+    @simulate_replica.setter
+    def simulate_replica(self, value: bool):
+        self.session.simulate_replica = value
 
-    def _device_equal_guard(self, a, b) -> bool:
-        fa = jax.tree.leaves(a)
-        fb = jax.tree.leaves(b)
-        return all(np.array_equal(np.asarray(x), np.asarray(y))
-                   for x, y in zip(fa, fb))
+    @property
+    def rmap(self):
+        return self.session.rmap
 
-    # -- main loop ---------------------------------------------------------------
+    @property
+    def coords(self):
+        return self.session.coords
 
-    def run(self, n_steps: int) -> TrainReport:
-        rep = TrainReport()
-        wall0 = time.perf_counter()
-        state = self.init_state()
-        replica_state = _copy_tree(state) if self.simulate_replica else None
-        vtime = 0.0
-        step = 0
-        last_ckpt_step = 0
-
-        if self.ckpt is not None:
-            self.ckpt.save(0, state, baseline=True,
-                           extra={"mode": self.ft.mode})
-
-        while step < n_steps:
-            # --- failure intake (interception -> coordinators -> plan) -----
-            if step in self.kill_schedule:
-                victims = self.kill_schedule.pop(step)
-                fresh = self.coords.intercept_failure(victims)
-                rep.failures += len(fresh)
-                self.rmap, plan = plan_recovery(
-                    self.rmap, fresh, last_ckpt_step=last_ckpt_step,
-                    current_step=step)
-                rep.events.append(StepEvent(step, plan.kind,
-                                            {"failed": fresh}))
-                if plan.kind == "promote":
-                    rep.promotions += len(plan.promotions)
-                    # replica slice state is CURRENT: swap, no rollback
-                    if self.simulate_replica and replica_state is not None:
-                        state = replica_state
-                        replica_state = _copy_tree(state) \
-                            if self.rmap.replication_degree() > 0 else None
-                elif plan.kind == "restart_elastic":
-                    rep.restarts += 1
-                    if self.ckpt is not None and self.ckpt.latest_tag():
-                        t0 = time.perf_counter()
-                        state, ck_step, _ = self.ckpt.restore(state)
-                        rep.restore_s += time.perf_counter() - t0
-                        rep.rolled_back_steps += step - ck_step
-                        step = ck_step
-                    else:
-                        # pure replication without checkpoints: restart at 0
-                        state = self.init_state()
-                        rep.rolled_back_steps += step
-                        step = 0
-                    if self.simulate_replica:
-                        replica_state = _copy_tree(state)
-
-            # --- one training step (deterministic batch = f(step)) ---------
-            batch = self.batch_fn(step)
-            state, loss = self.train_step(state, batch)
-            if self.simulate_replica and replica_state is not None:
-                # the replica slice executes the same step on the same data
-                replica_state, _ = self.train_step(replica_state, batch)
-            rep.losses.append(float(loss))
-            step += 1
-            vtime += self.step_time_s
-            rep.steps = step
-
-            # --- coordinated checkpoint (primary timer) --------------------
-            if self.ckpt is not None and \
-                    self.ft.mode in ("checkpoint", "combined"):
-                self._maybe_set_interval(self.ckpt.last_write_s or 0.05,
-                                         vtime)
-                if self.coords.due_checkpoint(vtime):
-                    t0 = time.perf_counter()
-                    self.ckpt.save(step, state)
-                    rep.ckpt_s += time.perf_counter() - t0
-                    rep.ckpt_writes += 1
-                    last_ckpt_step = step
-                    self.coords.restart_timer(vtime)
-
-        rep.final_state = state
-        rep.wall_s = time.perf_counter() - wall0
-        return rep
+    def run(self, n_steps: int) -> RunReport:
+        return self.session.run(self.workload, n_steps)

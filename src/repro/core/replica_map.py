@@ -24,11 +24,20 @@ from typing import Dict, List, Optional, Set
 
 
 class ApplicationDead(Exception):
-    """Both copies of some rank have failed: restart from checkpoint."""
+    """Both copies of some rank have failed: restart from checkpoint.
 
-    def __init__(self, rank: int):
+    ``events`` carries the repairs that WERE applied before/alongside the
+    fatal death (promotions, replica drops) and ``dead_ranks`` every rank
+    that lost both copies — so a batch failure leaves the map consistent
+    and fully described for ``restart_map``.
+    """
+
+    def __init__(self, rank: int, events: Optional[List[dict]] = None,
+                 dead_ranks: Optional[List[int]] = None):
         super().__init__(f"rank {rank}: computational and replica both dead")
         self.rank = rank
+        self.events = events or []
+        self.dead_ranks = dead_ranks if dead_ranks is not None else [rank]
 
 
 @dataclass
@@ -123,8 +132,15 @@ class ReplicaMap:
 
     def fail_many(self, workers) -> List[dict]:
         """Simultaneous (node-level) failure: all deaths are recorded before
-        any promotion decision, matching the paper's node-failure handling."""
-        events = []
+        any promotion decision, matching the paper's node-failure handling.
+
+        Every death in the batch is processed (promotions that succeed are
+        applied and kept); if any rank loses both copies, ApplicationDead is
+        raised AFTER the whole batch, carrying the applied ``events`` and all
+        ``dead_ranks`` — the map stays consistent for ``restart_map``.
+        """
+        events: List[dict] = []
+        dead_ranks: List[int] = []
         pending = [w for w in workers if w not in self.dead]
         self.dead.update(pending)
         for w in pending:
@@ -136,18 +152,24 @@ class ReplicaMap:
                     if promoted is None:
                         self.cmp[r] = None
                         self.rep[r] = None
-                        raise ApplicationDead(r)
-                    self.cmp[r] = promoted
-                    self.rep[r] = None
-                    self.promotions += 1
-                    events.append({"kind": "promote", "worker": w, "rank": r,
-                                   "promoted": promoted})
+                        dead_ranks.append(r)
+                        events.append({"kind": "rank_dead", "worker": w,
+                                       "rank": r})
+                    else:
+                        self.cmp[r] = promoted
+                        self.rep[r] = None
+                        self.promotions += 1
+                        events.append({"kind": "promote", "worker": w,
+                                       "rank": r, "promoted": promoted})
                     break
                 if self.rep[r] == w:
                     self.rep[r] = None
                     events.append({"kind": "drop_replica", "worker": w,
                                    "rank": r})
                     break
+        if dead_ranks:
+            raise ApplicationDead(dead_ranks[0], events=events,
+                                  dead_ranks=dead_ranks)
         return events
 
     # -- invariants (property-tested) ----------------------------------------

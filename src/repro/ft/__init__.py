@@ -1,0 +1,42 @@
+"""Unified fault-tolerance API: one FT layer, many workloads (paper's thesis).
+
+This package is the single entry point for replication/checkpoint fault
+tolerance in this repo. It generalizes what used to be three divergent
+implementations (``FTTrainer``, ``ReplicatedServer.generate``'s hand-rolled
+cache failover, and parts of ``simrt``) into four small contracts:
+
+  Workload        - init_state/step (+ optional snapshot/restore); adapters
+                    exist for the jitted train step (``TrainWorkload``), the
+                    serving decode loop (``DecodeWorkload``) and the simrt
+                    generator apps (``SimAppWorkload``).
+  FTStrategy      - NoFT / CheckpointStrategy / ReplicationStrategy /
+                    CombinedStrategy: replica-state management (double
+                    execution + O(1) promotion), Young-Daly checkpointing,
+                    elastic restart.
+  FailureInjector - one injection interface subsuming step-indexed kill
+                    schedules, Weibull schedules and node-failure log replay.
+  FTSession       - the driver: ``run(workload, n_steps) -> RunReport`` with
+                    a typed event stream.
+
+See docs/ft_api.md for the contracts and the migration note from FTTrainer.
+"""
+from repro.ft.injector import (FailureInjector, LogReplayFailureInjector,
+                               NoFailures, StepKillInjector,
+                               TimedEventInjector, WeibullFailureInjector,
+                               as_injector)
+from repro.ft.session import FTSession, RunReport, StepEvent
+from repro.ft.strategy import (CheckpointStrategy, CombinedStrategy,
+                               FTStrategy, NoFT, ReplicationStrategy,
+                               make_strategy)
+from repro.ft.workload import (DecodeWorkload, SimAppWorkload, TrainWorkload,
+                               Workload, copy_tree)
+
+__all__ = [
+    "Workload", "TrainWorkload", "DecodeWorkload", "SimAppWorkload",
+    "copy_tree",
+    "FTStrategy", "NoFT", "CheckpointStrategy", "ReplicationStrategy",
+    "CombinedStrategy", "make_strategy",
+    "FailureInjector", "NoFailures", "StepKillInjector", "TimedEventInjector",
+    "WeibullFailureInjector", "LogReplayFailureInjector", "as_injector",
+    "FTSession", "RunReport", "StepEvent",
+]

@@ -1,0 +1,156 @@
+"""FTSession: the workload-agnostic FT driver.
+
+One loop, every workload: failure intake (injector -> interception ->
+coordinators -> plan_recovery), strategy-owned step execution (replica
+double-execution in replication modes), Young-Daly checkpointing, O(1)
+promotion and elastic restart — producing a ``RunReport`` with a typed
+event stream.
+
+This generalizes the old FTTrainer (which survives as a thin shim in
+repro.core.ft_runtime) and subsumes ReplicatedServer's hand-rolled cache
+failover (repro.launch.serve now drives a DecodeWorkload through here).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+from repro.configs.base import FTConfig
+from repro.core.coordinator import ClusterTopology, CoordinatorSet
+from repro.core.replica_map import ReplicaMap
+from repro.core.shrink import plan_recovery
+from repro.ft.injector import FailureInjector, as_injector
+from repro.ft.strategy import FTStrategy, make_strategy
+
+
+@dataclass
+class StepEvent:
+    step: int
+    kind: str
+    detail: dict = field(default_factory=dict)
+
+
+@dataclass
+class RunReport:
+    """Workload-agnostic run outcome (generalizes the old TrainReport)."""
+
+    steps: int = 0
+    metrics: List[Any] = field(default_factory=list)
+    events: List[StepEvent] = field(default_factory=list)
+    failures: int = 0
+    promotions: int = 0
+    restarts: int = 0
+    ckpt_writes: int = 0
+    rolled_back_steps: int = 0
+    wall_s: float = 0.0
+    ckpt_s: float = 0.0
+    restore_s: float = 0.0
+    final_state: Any = None
+
+    @property
+    def losses(self) -> List[float]:
+        """Scalar metrics as floats (train workloads emit the loss)."""
+        return [float(m) for m in self.metrics if m is not None]
+
+
+# Backwards-compatible alias: the old name for the train-specific report.
+TrainReport = RunReport
+
+
+class FTSession:
+    """Drives any Workload under an FTStrategy with unified failure
+    injection.
+
+    On a real multi-pod mesh the replica slice is pod 1 and promotion is a
+    VirtualMesh relabel; on this container both slices live on the same
+    device and ``simulate_replica`` executes the replica step redundantly —
+    preserving the exact semantics (bit-identical states, O(1) promotion)
+    at 2x local cost, so FT-theorem tests can compare failure runs against
+    failure-free runs for equality.
+    """
+
+    def __init__(self, *, ft: Optional[FTConfig] = None,
+                 strategy: Optional[FTStrategy] = None,
+                 injector=None,
+                 ckpt_dir: Optional[str] = None,
+                 n_logical_workers: int = 8,
+                 workers_per_node: int = 4,
+                 simulate_replica: bool = True,
+                 step_time_s: float = 1.0,
+                 allow_restart: bool = True):
+        if strategy is None:
+            strategy = make_strategy(ft or FTConfig())
+        self.strategy = strategy.bind(self)
+        self.ft = strategy.ft
+        self.injector: FailureInjector = as_injector(injector)
+        self.n_logical_workers = n_logical_workers
+        self.workers_per_node = workers_per_node
+        self.simulate_replica = simulate_replica and strategy.wants_replica
+        self.step_time_s = step_time_s
+        self.allow_restart = allow_restart
+        self.ckpt_dir = ckpt_dir
+        self.ckpt = None
+        self._init_fabric()
+
+    def _init_fabric(self):
+        n = self.n_logical_workers
+        m = self.strategy.n_replica_workers(n)
+        self.rmap = ReplicaMap(n, m)
+        self.topology = ClusterTopology(self.rmap.world_size,
+                                        self.workers_per_node)
+        self.coords = CoordinatorSet(self.topology, float("inf"))
+
+    # -- main loop -----------------------------------------------------------
+
+    def run(self, workload, n_steps: int) -> RunReport:
+        rep = RunReport()
+        wall0 = time.perf_counter()
+        self._init_fabric()                       # re-entrant sessions
+        if self.ckpt_dir and self.strategy.wants_checkpoint and \
+                getattr(workload, "disk_checkpointable", True):
+            from repro.checkpoint import Checkpointer
+            self.ckpt = Checkpointer(self.ckpt_dir)
+        else:
+            self.ckpt = None
+
+        state = workload.init_state()
+        strat = self.strategy
+        strat.on_start(workload, state, rep)
+        # horizon slack: rollbacks extend virtual time past n_steps, so
+        # time-indexed schedules get 2x headroom (mirrors SimRuntime.run)
+        self.injector.prepare(n_steps * self.step_time_s * 2.0,
+                              self.rmap.alive())
+
+        vtime = 0.0
+        step = 0
+        while step < n_steps:
+            # --- failure intake (injector -> coordinators -> plan) ---------
+            for ev in self.injector.poll(step, vtime):
+                fresh = self.coords.intercept_failure(list(ev.workers))
+                fresh = [w for w in fresh if w not in self.rmap.dead]
+                if not fresh:
+                    continue
+                rep.failures += len(fresh)
+                self.rmap, plan = plan_recovery(
+                    self.rmap, fresh,
+                    last_ckpt_step=strat.last_ckpt_step, current_step=step)
+                rep.events.append(StepEvent(step, plan.kind,
+                                            {"failed": list(fresh),
+                                             "promotions": plan.promotions}))
+                state, step = strat.handle_plan(workload, state, plan,
+                                                step, rep)
+
+            # --- one workload step (strategy may double-execute) -----------
+            state, metrics = strat.step(workload, state, step)
+            rep.metrics.append(metrics)
+            step += 1
+            vtime += self.step_time_s
+            rep.steps = step
+
+            # --- coordinated checkpoint (primary timer) --------------------
+            strat.maybe_checkpoint(workload, state, step, vtime, rep)
+
+        rep.final_state = state
+        rep.wall_s = time.perf_counter() - wall0
+        return rep

@@ -1,0 +1,202 @@
+"""FTStrategy hierarchy: who owns the replica state and the checkpoints.
+
+Strategies encapsulate everything that used to be inlined in FTTrainer and
+ReplicatedServer:
+
+  NoFT                 native step loop (the "EMPI direct" baseline)
+  CheckpointStrategy   coordinated checkpoint/restart at the Young-Daly
+                       interval (disk when the session has a ckpt_dir and
+                       the workload is disk-checkpointable, else in-memory
+                       snapshots — the ReStore-style replicated-state idea)
+  ReplicationStrategy  a replica redundantly executes every step; on
+                       computational failure the replica is promoted in O(1)
+                       (state already current — no restore, no rollback)
+  CombinedStrategy     both (checkpoints guard against pair deaths)
+
+A strategy is bound to one FTSession, which owns the coordinator fabric
+(CoordinatorSet), the role algebra (ReplicaMap) and the recovery planner
+(plan_recovery); the strategy decides what to do with each RecoveryPlan.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional, Tuple
+
+from repro.configs.base import FTConfig
+from repro.core import ckpt_policy
+from repro.ft.workload import copy_tree, restore_state, snapshot_state
+
+
+class FTStrategy:
+    mode = "none"
+    wants_replica = False
+    wants_checkpoint = False
+
+    def __init__(self, ft: Optional[FTConfig] = None):
+        self.ft = ft or FTConfig(mode=self.mode)
+        self.session = None
+        self.last_ckpt_step = 0
+
+    def bind(self, session) -> "FTStrategy":
+        self.session = session
+        return self
+
+    def n_replica_workers(self, n: int) -> int:
+        return 0
+
+    # -- lifecycle hooks -----------------------------------------------------
+
+    def on_start(self, workload, state, rep) -> None:
+        self.last_ckpt_step = 0
+
+    def step(self, workload, state, t) -> Tuple[Any, Any]:
+        return workload.step(state, t)
+
+    def maybe_checkpoint(self, workload, state, step, vtime, rep) -> None:
+        pass
+
+    def handle_plan(self, workload, state, plan, step, rep):
+        """Execute a RecoveryPlan; returns (state, step)."""
+        if plan.kind == "promote":
+            return self._on_promote(workload, state, plan, step, rep)
+        if plan.kind == "restart_elastic":
+            return self._on_restart(workload, state, step, rep)
+        return state, step                       # "continue": replicas dropped
+
+    # -- plan execution ------------------------------------------------------
+
+    def _on_promote(self, workload, state, plan, step, rep):
+        rep.promotions += len(plan.promotions)
+        return state, step
+
+    def _on_restart(self, workload, state, step, rep):
+        if not self.session.allow_restart:
+            raise RuntimeError(
+                "computational slice died without a live replica or "
+                "checkpoint: restart + replay required")
+        rep.restarts += 1
+        state, ck_step = self._restore(workload, state, rep)
+        rep.rolled_back_steps += step - ck_step
+        return state, ck_step
+
+    def _restore(self, workload, state, rep):
+        """No checkpoints: restart from scratch (deterministic init)."""
+        return workload.init_state(), 0
+
+
+class _ReplicaMixin:
+    """Replica-state management: double execution + O(1) promotion."""
+
+    wants_replica = True
+
+    def n_replica_workers(self, n: int) -> int:
+        return int(round(self.ft.replication_degree * n))
+
+    def _simulating(self) -> bool:
+        return self.session.simulate_replica
+
+    def on_start(self, workload, state, rep) -> None:
+        super().on_start(workload, state, rep)
+        self.replica_state = copy_tree(state) if self._simulating() else None
+
+    def step(self, workload, state, t):
+        state, metrics = super().step(workload, state, t)
+        if self._simulating() and self.replica_state is not None:
+            # the replica slice executes the same step on the same data
+            self.replica_state, _ = workload.step(self.replica_state, t)
+        return state, metrics
+
+    def _on_promote(self, workload, state, plan, step, rep):
+        state, step = super()._on_promote(workload, state, plan, step, rep)
+        if self._simulating() and self.replica_state is not None:
+            # replica slice state is CURRENT: swap, no rollback
+            state = self.replica_state
+            self.replica_state = copy_tree(state) \
+                if self.session.rmap.replication_degree() > 0 else None
+        return state, step
+
+    def _on_restart(self, workload, state, step, rep):
+        state, step = super()._on_restart(workload, state, step, rep)
+        if self._simulating():
+            self.replica_state = copy_tree(state)
+        return state, step
+
+
+class _CheckpointMixin:
+    """Coordinated checkpoint/restart on the primary coordinator's
+    Young-Daly timer; disk via Checkpointer or in-memory snapshots."""
+
+    wants_checkpoint = True
+
+    def on_start(self, workload, state, rep) -> None:
+        super().on_start(workload, state, rep)
+        self._interval_set = False
+        self._mem_ckpt = None
+        if self.session.ckpt is not None:
+            self.session.ckpt.save(0, state, baseline=True,
+                                   extra={"mode": self.ft.mode})
+
+    def maybe_checkpoint(self, workload, state, step, vtime, rep) -> None:
+        sess = self.session
+        if not self._interval_set:
+            measured = (sess.ckpt.last_write_s if sess.ckpt else 0.0) or 0.05
+            c = self.ft.ckpt_cost_s or max(measured, 1e-6)
+            interval = self.ft.ckpt_interval_s or \
+                ckpt_policy.young_daly_interval(self.ft.mtbf_s, c)
+            sess.coords.set_interval(interval, vtime)
+            self._interval_set = True
+        if sess.coords.due_checkpoint(vtime):
+            t0 = time.perf_counter()
+            if sess.ckpt is not None:
+                sess.ckpt.save(step, state)
+            else:
+                self._mem_ckpt = (step, snapshot_state(workload, state))
+            rep.ckpt_s += time.perf_counter() - t0
+            rep.ckpt_writes += 1
+            self.last_ckpt_step = step
+            sess.coords.restart_timer(vtime)
+
+    def _restore(self, workload, state, rep):
+        sess = self.session
+        t0 = time.perf_counter()
+        if sess.ckpt is not None and sess.ckpt.latest_tag():
+            state, ck_step, _ = sess.ckpt.restore(state)
+        elif self._mem_ckpt is not None:
+            ck_step, snap = self._mem_ckpt
+            state = restore_state(workload, snap)
+        else:
+            return super()._restore(workload, state, rep)
+        rep.restore_s += time.perf_counter() - t0
+        return state, ck_step
+
+
+class NoFT(FTStrategy):
+    mode = "none"
+
+
+class CheckpointStrategy(_CheckpointMixin, FTStrategy):
+    mode = "checkpoint"
+
+
+class ReplicationStrategy(_ReplicaMixin, FTStrategy):
+    mode = "replication"
+
+
+class CombinedStrategy(_ReplicaMixin, _CheckpointMixin, FTStrategy):
+    mode = "combined"
+
+
+_STRATEGIES = {
+    "none": NoFT,
+    "checkpoint": CheckpointStrategy,
+    "replication": ReplicationStrategy,
+    "combined": CombinedStrategy,
+}
+
+
+def make_strategy(ft: FTConfig) -> FTStrategy:
+    try:
+        return _STRATEGIES[ft.mode](ft)
+    except KeyError:
+        raise ValueError(f"unknown FT mode {ft.mode!r}; "
+                         f"expected one of {sorted(_STRATEGIES)}") from None

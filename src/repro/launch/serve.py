@@ -1,10 +1,11 @@
 """Serving driver: batched prefill + decode with replication failover.
 
-The paper's replication story applied to inference: two model replicas
-(slices) serve the same request batch in lockstep; when the computational
-slice fails mid-generation, the replica's KV cache is CURRENT, so failover
-costs one promotion (no prefill replay). Checkpoint mode instead snapshots
-(cache, tokens) every ``ckpt_every`` decode steps and replays from there.
+The paper's replication story applied to inference, now driven through the
+unified ``repro.ft`` API: the decode loop is a ``DecodeWorkload`` whose
+state carries the KV cache; ``FTSession`` owns replica management, so when
+the computational slice fails mid-generation the replica's cache is CURRENT
+and failover costs one promotion (no prefill replay).  ReplicatedServer
+itself contains no replication or promotion logic anymore.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
@@ -21,12 +22,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import RunConfig, get_arch
-from repro.configs.base import ShapeConfig
+from repro.configs.base import FTConfig, ShapeConfig
+from repro.ft import DecodeWorkload, FTSession, StepKillInjector
 from repro.launch.step_fns import make_decode_step, make_prefill_step
-from repro.models import build_model
 
 
 class ReplicatedServer:
+    """Model plumbing (prefill/decode jits, params) + a thin ``generate``
+    that delegates all fault tolerance to FTSession."""
+
     def __init__(self, arch: str, *, reduced: bool = True, batch: int = 4,
                  prompt_len: int = 32, replication: bool = True,
                  seed: int = 0):
@@ -49,6 +53,7 @@ class ReplicatedServer:
         self.prompt_len = prompt_len
         self.failures = 0
         self.promotions = 0
+        self.last_report = None
 
     def _extras(self, batch_tokens):
         b = {"tokens": batch_tokens}
@@ -62,36 +67,38 @@ class ReplicatedServer:
                 jnp.bfloat16)
         return b
 
+    def workload(self, prompt_tokens: np.ndarray) -> DecodeWorkload:
+        """The decode loop as a Workload (also used by tests directly)."""
+        return DecodeWorkload(params=self.params, prefill=self.prefill,
+                              decode=self.decode,
+                              batch=self._extras(jnp.asarray(prompt_tokens)),
+                              prompt_len=self.prompt_len)
+
+    def session(self, kill_at: int = -1) -> FTSession:
+        """One logical serving rank; replication adds its replica slice.
+        ``allow_restart=False``: without a replica or checkpoint a mid-decode
+        death is fatal (a restart would need a prefill replay)."""
+        mode = "replication" if self.replication else "none"
+        injector = StepKillInjector({kill_at: [0]}) if kill_at >= 0 else None
+        return FTSession(ft=FTConfig(mode=mode), injector=injector,
+                         n_logical_workers=1, workers_per_node=1,
+                         allow_restart=False)
+
     def generate(self, prompt_tokens: np.ndarray, n_gen: int,
-                 kill_at: int = -1):
+                 kill_at: int = -1) -> np.ndarray:
         """Greedy decode; kill_at k kills the computational slice after k
         generated tokens (replication failover or abort)."""
-        batch = self._extras(jnp.asarray(prompt_tokens))
-        logits, cache = self.prefill(self.params, batch)
-        rep_cache = jax.tree.map(lambda x: x.copy(), cache) \
-            if self.replication else None
-        out = []
-        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
-        pos = jnp.full((self.batch, 1), self.prompt_len, jnp.int32)
-        for i in range(n_gen):
-            if i == kill_at:
-                self.failures += 1
-                if not self.replication:
-                    raise RuntimeError(
-                        "computational slice died without a replica: "
-                        "restart + prefill replay required")
-                # promotion: the replica cache is current — swap and go on
-                cache = rep_cache
-                rep_cache = None
-                self.promotions += 1
-            out.append(np.asarray(tok))
-            logits, cache = self.decode(self.params, cache, tok, pos)
-            if rep_cache is not None:
-                _, rep_cache = self.decode(self.params, rep_cache, tok, pos)
-            tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None] \
-                .astype(jnp.int32)
-            pos = pos + 1
-        return np.concatenate(out, axis=1)
+        session = self.session(kill_at)
+        try:
+            rep = session.run(self.workload(prompt_tokens), n_gen)
+        except RuntimeError:
+            # fatal (unrecoverable) kill: still record the failure
+            self.failures += 1
+            raise
+        self.last_report = rep
+        self.failures += rep.failures
+        self.promotions += rep.promotions
+        return DecodeWorkload.tokens(rep.final_state)
 
 
 def main(argv=None):

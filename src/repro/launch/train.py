@@ -4,6 +4,10 @@ On this container it trains *reduced* configs end-to-end on CPU (the
 examples use it); on a real pod the same driver trains the full config —
 the mesh/sharding path is identical to the dry-run's.
 
+The FT loop is the unified ``repro.ft`` API: ``build_workload`` wraps the
+jitted train step as a ``TrainWorkload``; ``build_session`` pairs it with an
+``FTSession``; ``build_trainer`` keeps the legacy FTTrainer surface.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --reduced \
       --steps 50 --ft-mode combined --mtbf 30 --kill 12:0 --kill 30:1
@@ -18,19 +22,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import RunConfig, get_arch, TRAIN_4K
+from repro.configs import RunConfig, get_arch
 from repro.configs.base import FTConfig, ShapeConfig
 from repro.core.ft_runtime import FTTrainer
 from repro.data import DataConfig, TokenSource
-from repro.launch.step_fns import make_opt_cfg, make_train_step
-from repro.models import build_model
+from repro.ft import FTSession, TrainWorkload
+from repro.launch.step_fns import make_train_step
 from repro.optim import adamw
 
 
-def build_trainer(arch: str, *, reduced: bool = True, batch: int = 8,
-                  seq: int = 128, ft: FTConfig, ckpt_dir=None,
-                  kill_schedule=None, seed: int = 0,
-                  n_logical_workers: int = 8, lr: float = 1e-3):
+def build_workload(arch: str, *, reduced: bool = True, batch: int = 8,
+                   seq: int = 128, seed: int = 0,
+                   lr: float = 1e-3) -> TrainWorkload:
     cfg = get_arch(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -61,8 +64,36 @@ def build_trainer(arch: str, *, reduced: bool = True, batch: int = 8,
         params, opt, loss = jitted(state["params"], state["opt"], b)
         return {"params": params, "opt": opt}, loss
 
-    return FTTrainer(train_step=train_step, init_state=init_state,
-                     batch_fn=batch_fn, ft=ft, ckpt_dir=ckpt_dir,
+    return TrainWorkload(train_step=train_step, init_state=init_state,
+                         batch_fn=batch_fn)
+
+
+def build_session(arch: str, *, reduced: bool = True, batch: int = 8,
+                  seq: int = 128, ft: FTConfig, ckpt_dir=None,
+                  kill_schedule=None, injector=None, seed: int = 0,
+                  n_logical_workers: int = 8, workers_per_node: int = 4,
+                  lr: float = 1e-3):
+    """The new-API entry point: returns (FTSession, TrainWorkload)."""
+    workload = build_workload(arch, reduced=reduced, batch=batch, seq=seq,
+                              seed=seed, lr=lr)
+    if injector is None:
+        injector = dict(kill_schedule or {})
+    session = FTSession(ft=ft, ckpt_dir=ckpt_dir, injector=injector,
+                        n_logical_workers=n_logical_workers,
+                        workers_per_node=workers_per_node)
+    return session, workload
+
+
+def build_trainer(arch: str, *, reduced: bool = True, batch: int = 8,
+                  seq: int = 128, ft: FTConfig, ckpt_dir=None,
+                  kill_schedule=None, seed: int = 0,
+                  n_logical_workers: int = 8, lr: float = 1e-3) -> FTTrainer:
+    """Legacy surface: an FTTrainer shim over build_session's plumbing."""
+    workload = build_workload(arch, reduced=reduced, batch=batch, seq=seq,
+                              seed=seed, lr=lr)
+    return FTTrainer(train_step=workload.train_step,
+                     init_state=workload.init_state_fn,
+                     batch_fn=workload.batch_fn, ft=ft, ckpt_dir=ckpt_dir,
                      n_logical_workers=n_logical_workers,
                      kill_schedule=kill_schedule)
 
@@ -92,12 +123,11 @@ def main(argv=None):
 
     ft = FTConfig(mode=args.ft_mode, mtbf_s=args.mtbf,
                   ckpt_interval_s=args.ckpt_interval)
-    trainer = build_trainer(args.arch, reduced=args.reduced,
-                            batch=args.batch, seq=args.seq, ft=ft,
-                            ckpt_dir=args.ckpt_dir, kill_schedule=kills,
-                            seed=args.seed)
+    session, workload = build_session(
+        args.arch, reduced=args.reduced, batch=args.batch, seq=args.seq,
+        ft=ft, ckpt_dir=args.ckpt_dir, kill_schedule=kills, seed=args.seed)
     t0 = time.perf_counter()
-    rep = trainer.run(args.steps)
+    rep = session.run(workload, args.steps)
     dt = time.perf_counter() - t0
     print(f"arch={args.arch} mode={args.ft_mode} steps={rep.steps} "
           f"loss[first,last]=({rep.losses[0]:.4f},{rep.losses[-1]:.4f}) "

@@ -127,6 +127,7 @@ class SimRuntime:
     def __init__(self, app, ft: FTConfig, *, workers_per_node: int = 4,
                  costs: CostModel = None, ckpt_dir: str = None,
                  failure_events: List[FailureEvent] = None,
+                 injector=None,
                  respawn_on_restart: bool = True,
                  drop_inflight_on_failure: bool = True,
                  seed: int = 0):
@@ -148,8 +149,14 @@ class SimRuntime:
             if ft.mode in ("checkpoint", "combined") else float("inf")
         self.coords = CoordinatorSet(self.topology, interval)
 
-        self.events = sorted(failure_events or [], key=lambda e: e.time_s)
-        self.event_i = 0
+        # unified failure injection (repro.ft.injector): legacy
+        # failure_events lists are wrapped; any FailureInjector works.
+        from repro.ft.injector import as_injector
+        if injector is not None and failure_events:
+            raise ValueError("pass failure_events OR injector, not both")
+        self.injector = as_injector(
+            injector if injector is not None else failure_events)
+        self._injector_prepared = False
 
         # rank-level logs: the sender-based message log (owned by the cmp
         # worker; part of the replication payload in a real deployment)
@@ -325,12 +332,7 @@ class SimRuntime:
     # --------------------------------------------------------------- failure
 
     def _due_events(self, until: float) -> List[FailureEvent]:
-        out = []
-        while self.event_i < len(self.events) and \
-                self.events[self.event_i].time_s <= until:
-            out.append(self.events[self.event_i])
-            self.event_i += 1
-        return out
+        return self.injector.poll(self.step_idx, until)
 
     def _apply_failure(self, ev: FailureEvent):
         victims = [w for w in ev.workers if w in self.workers]
@@ -559,6 +561,13 @@ class SimRuntime:
 
     def run(self, n_steps: int) -> RunResult:
         wall0 = _time.perf_counter()
+        if not self._injector_prepared:
+            # horizon with slack: virtual time also advances on checkpoint
+            # writes/restores (pre-scheduled event lists ignore prepare)
+            horizon = n_steps * self.costs.step_time_s * 2.0 \
+                + 100.0 * self.costs.ckpt_cost_s
+            self.injector.prepare(horizon, self.rmap.alive())
+            self._injector_prepared = True
         while self.step_idx < n_steps:
             try:
                 self._run_step()

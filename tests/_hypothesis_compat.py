@@ -1,0 +1,91 @@
+"""Use the real ``hypothesis`` when installed; otherwise fall back to a
+minimal deterministic property-testing shim implementing the small strategy
+subset these tests use (floats, integers, lists, sampled_from).
+
+The fallback draws ``max_examples`` pseudo-random examples from a seed
+derived from the test name (stable across runs) and reports the falsifying
+example on failure.  It exists so the tier-1 suite collects and runs in
+environments without dev dependencies; install ``requirements-dev.txt`` to
+get real shrinking/coverage.
+"""
+try:
+    from hypothesis import assume, given, settings  # noqa: F401
+    from hypothesis import strategies as st         # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import random
+    import sys
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Rejected(Exception):
+        pass
+
+    def assume(condition):
+        if not condition:
+            raise _Rejected()
+        return True
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies as st`
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[
+                rng.randrange(len(elements))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elements.draw(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def settings(max_examples=100, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_settings = {"max_examples": max_examples}
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                conf = getattr(wrapper, "_compat_settings",
+                               getattr(fn, "_compat_settings", {}))
+                n = conf.get("max_examples", 100)
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    vals = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **vals, **kwargs)
+                    except _Rejected:
+                        continue
+                    except Exception:
+                        print(f"falsifying example: {fn.__name__}({vals})",
+                              file=sys.stderr)
+                        raise
+
+            # pytest must not see the strategy params as fixtures
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco

@@ -1,0 +1,259 @@
+"""The unified repro.ft API: FTSession x {strategies, injectors, workloads}.
+
+Uses a cheap deterministic numpy workload for the strategy/fabric matrix
+(no model build), the HPCG generator app for SimAppWorkload, and the real
+decode path for the serving-failover FT theorem.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import FTConfig
+from repro.core.failure_sim import FailureEvent
+from repro.ft import (FTSession, NoFailures, SimAppWorkload, StepKillInjector,
+                      TimedEventInjector, WeibullFailureInjector, as_injector)
+
+STEPS = 12
+
+
+class CounterWorkload:
+    """Deterministic pytree state; step t is a pure function of (state, t),
+    so failure-free and failover runs must agree bit-for-bit."""
+
+    disk_checkpointable = False
+
+    def init_state(self):
+        return {"x": np.float64(1.0), "hist": np.zeros(4)}
+
+    def step(self, state, t):
+        x = state["x"] * 1.0000001 + np.sin(0.1 * t)
+        hist = np.roll(state["hist"], 1)
+        hist[0] = x
+        return {"x": x, "hist": hist}, float(x)
+
+
+class DiskCounterWorkload(CounterWorkload):
+    disk_checkpointable = True
+
+
+def _run(mode, injector=None, *, cls=CounterWorkload, ckpt_dir=None,
+         ckpt_interval=0.0, allow_restart=True, n=8, wpn=4, steps=STEPS):
+    session = FTSession(ft=FTConfig(mode=mode, ckpt_interval_s=ckpt_interval),
+                        injector=injector, ckpt_dir=ckpt_dir,
+                        n_logical_workers=n, workers_per_node=wpn,
+                        allow_restart=allow_restart)
+    return session, session.run(cls(), steps)
+
+
+def _assert_same_state(a, b):
+    assert a["x"] == b["x"]
+    np.testing.assert_array_equal(a["hist"], b["hist"])
+
+
+# ------------------------------------------------------------- strategies
+
+def test_promotion_bit_identical():
+    _, clean = _run("none")
+    session, rep = _run("replication", {5: [0]})
+    assert rep.failures == 1 and rep.promotions == 1 and rep.restarts == 0
+    assert [e.kind for e in rep.events] == ["promote"]
+    _assert_same_state(rep.final_state, clean.final_state)
+
+
+def test_pair_death_memory_checkpoint_restart():
+    """Kill a cmp slice then its promoted replica: elastic restart from the
+    in-memory checkpoint (no ckpt_dir) lands on the identical final state."""
+    _, clean = _run("none")
+    session, rep = _run("combined", {4: [1], 8: [9]}, ckpt_interval=4.0)
+    assert rep.promotions == 1 and rep.restarts == 1
+    assert rep.rolled_back_steps > 0 and rep.ckpt_writes >= 1
+    _assert_same_state(rep.final_state, clean.final_state)
+
+
+def test_pair_death_disk_checkpoint_restart(tmp_path):
+    _, clean = _run("none")
+    session, rep = _run("combined", {4: [1], 8: [9]},
+                        cls=DiskCounterWorkload, ckpt_dir=str(tmp_path),
+                        ckpt_interval=4.0)
+    assert rep.restarts == 1
+    assert (tmp_path / "LATEST").exists()
+    _assert_same_state(rep.final_state, clean.final_state)
+
+
+def test_mode_none_restarts_from_scratch():
+    _, clean = _run("none")
+    _, rep = _run("none", {3: [0]})
+    assert rep.restarts == 1 and rep.rolled_back_steps == 3
+    _assert_same_state(rep.final_state, clean.final_state)
+
+
+def test_allow_restart_false_is_fatal():
+    with pytest.raises(RuntimeError):
+        _run("none", {3: [0]}, allow_restart=False)
+
+
+def test_checkpoint_only_memory_snapshots():
+    _, clean = _run("none")
+    _, rep = _run("checkpoint", {7: [2]}, ckpt_interval=3.0)
+    assert rep.restarts == 1 and rep.ckpt_writes >= 1
+    _assert_same_state(rep.final_state, clean.final_state)
+
+
+def test_session_is_reentrant_with_consumable_injector():
+    """prepare() resets injector drain state: the same session fires the
+    same kill schedule on every run."""
+    session = FTSession(ft=FTConfig(mode="replication"), injector={5: [0]},
+                        n_logical_workers=8)
+    r1 = session.run(CounterWorkload(), STEPS)
+    r2 = session.run(CounterWorkload(), STEPS)
+    assert r1.failures == r2.failures == 1
+    assert r1.promotions == r2.promotions == 1
+    _assert_same_state(r1.final_state, r2.final_state)
+
+
+def test_ckpt_dir_untouched_by_non_checkpoint_strategies(tmp_path):
+    import os
+    _, rep = _run("replication", {5: [0]}, cls=DiskCounterWorkload,
+                  ckpt_dir=str(tmp_path / "ck"))
+    assert rep.promotions == 1
+    assert not os.path.exists(tmp_path / "ck")    # no stray Checkpointer
+
+
+# --------------------------------------------------- coordinator migration
+
+def test_checkpoints_continue_after_node0_death():
+    """The primary coordinator migrates off the dead node and keeps the
+    Young-Daly timer running (satellite: CoordinatorSet.primary fix)."""
+    session, rep = _run("combined", {2: [0, 1]}, n=4, wpn=2,
+                        ckpt_interval=2.0, steps=10)
+    assert rep.promotions == 2
+    assert session.coords.primary.node != 0
+    assert 0 in session.coords.dead_nodes
+    # interval 2.0 over 10 steps: writes keep landing after the node death
+    assert rep.ckpt_writes >= 3
+    assert session.strategy.last_ckpt_step > 2
+
+
+# ---------------------------------------------------------------- injectors
+
+def test_step_kill_injector_fires_once():
+    inj = StepKillInjector({3: [1, 2]})
+    assert inj.poll(2, 2.0) == []
+    evs = inj.poll(3, 3.0)
+    assert len(evs) == 1 and evs[0].workers == (1, 2)
+    assert inj.poll(3, 3.0) == []                 # drained
+
+
+def test_timed_injector_drains_by_time():
+    inj = TimedEventInjector([FailureEvent(5.0, (1,)),
+                              FailureEvent(2.0, (0,))])
+    assert [e.workers for e in inj.poll(0, 2.5)] == [(0,)]
+    assert [e.workers for e in inj.poll(1, 9.0)] == [(1,)]
+    assert inj.poll(2, 99.0) == []
+
+
+def test_as_injector_dispatch():
+    assert isinstance(as_injector(None), NoFailures)
+    assert isinstance(as_injector({1: [0]}), StepKillInjector)
+    assert isinstance(as_injector([FailureEvent(1.0, (0,))]),
+                      TimedEventInjector)
+    inj = WeibullFailureInjector(mtbf_s=10.0, seed=3)
+    assert as_injector(inj) is inj
+    with pytest.raises(TypeError):
+        as_injector([1, 2, 3])
+
+
+def test_weibull_injector_prepare_then_poll():
+    inj = WeibullFailureInjector(mtbf_s=5.0, seed=1)
+    assert inj.poll(0, 1e9) == []                 # not prepared: no events
+    inj.prepare(100.0, list(range(8)))
+    events = inj.poll(0, 100.0)
+    assert len(events) > 5                        # ~20 expected at mtbf 5
+    assert all(0 <= e.workers[0] < 8 for e in events)
+
+
+def test_weibull_injector_through_session():
+    _, clean = _run("none")
+    session = FTSession(ft=FTConfig(mode="replication"),
+                        injector=WeibullFailureInjector(mtbf_s=4.0, seed=2),
+                        n_logical_workers=8)
+    rep = session.run(CounterWorkload(), STEPS)
+    assert rep.failures > 0
+    _assert_same_state(rep.final_state, clean.final_state)
+
+
+# ------------------------------------------------------------ app workloads
+
+def _hpcg():
+    from repro.apps.hpcg import HPCG
+    return SimAppWorkload(HPCG(n_ranks=2, nx=6, ny=6, nz=4))
+
+
+def test_simapp_hpcg_runs():
+    w = _hpcg()
+    state = w.init_state()
+    for t in range(4):
+        state, _ = w.step(state, t)
+    assert state[0]["iters"] == 4
+
+
+def test_simapp_hpcg_ft_theorem():
+    w = _hpcg()
+    clean = FTSession(ft=FTConfig(mode="none"),
+                      n_logical_workers=2).run(w, 8)
+    session = FTSession(ft=FTConfig(mode="replication"),
+                        injector={3: [0]}, n_logical_workers=2)
+    faulty = session.run(_hpcg(), 8)
+    assert faulty.promotions == 1
+    assert w.check(faulty.final_state) == w.check(clean.final_state)
+    for r in range(2):
+        np.testing.assert_array_equal(faulty.final_state[r]["x"],
+                                      clean.final_state[r]["x"])
+
+
+def test_simapp_pic_ft_theorem():
+    from repro.apps.pic import PIC
+
+    def wl():
+        return SimAppWorkload(PIC(n_ranks=3, cells_per_rank=8,
+                                  particles_per_rank=24))
+
+    w = wl()
+    clean = FTSession(ft=FTConfig(mode="none"), n_logical_workers=3).run(w, 6)
+    faulty = FTSession(ft=FTConfig(mode="replication"), injector={2: [1]},
+                       n_logical_workers=3).run(wl(), 6)
+    assert faulty.promotions == 1
+    assert w.check(faulty.final_state) == w.check(clean.final_state)
+
+
+# -------------------------------------------------------- serving failover
+
+@pytest.fixture(scope="module")
+def serve_fixture():
+    from repro.launch.serve import ReplicatedServer
+    prompts = np.random.default_rng(0).integers(0, 400, (2, 16),
+                                                dtype=np.int32)
+    srv = ReplicatedServer("codeqwen1.5-7b", batch=2, prompt_len=16)
+    return srv, prompts
+
+
+def test_serve_failover_via_session(serve_fixture):
+    """Mid-decode kill with replication: bit-identical token stream (the
+    paper's O(1)-promotion property on the serving workload)."""
+    from repro.ft import DecodeWorkload
+    srv, prompts = serve_fixture
+    clean = srv.session(kill_at=-1).run(srv.workload(prompts), 8)
+    faulty = srv.session(kill_at=3).run(srv.workload(prompts), 8)
+    assert faulty.promotions == 1 and faulty.failures == 1
+    np.testing.assert_array_equal(DecodeWorkload.tokens(faulty.final_state),
+                                  DecodeWorkload.tokens(clean.final_state))
+
+
+def test_serve_failover_without_replication_fatal(serve_fixture):
+    """Same kill, no replica: a restart would need a prefill replay, so the
+    session refuses (allow_restart=False) — the old inline behavior."""
+    srv, prompts = serve_fixture
+    session = FTSession(ft=FTConfig(mode="none"), injector={3: [0]},
+                        n_logical_workers=1, workers_per_node=1,
+                        allow_restart=False)
+    with pytest.raises(RuntimeError):
+        session.run(srv.workload(prompts), 8)

@@ -138,3 +138,25 @@ def test_coordinator_propagation_and_timer():
     cs.restart_timer(10.1)
     assert not cs.due_checkpoint(15.0)
     assert cs.due_checkpoint(20.2)
+
+
+def test_primary_migrates_on_node_death_with_timer():
+    """Node-0 death moves the primary to the first live node, carrying the
+    checkpoint timer, so checkpoints continue (paper §3.1)."""
+    topo = ClusterTopology(8, 2)
+    cs = CoordinatorSet(topo, ckpt_interval_s=10.0)
+    cs.restart_timer(2.0)                          # next checkpoint at 12.0
+    cs.intercept_failure([0, 1])                   # node 0 entirely dead
+    assert cs.dead_nodes == {0}
+    assert cs.primary.node == 1 and cs.primary.primary
+    assert not cs.coordinators[0].primary
+    assert not cs.due_checkpoint(11.9)             # timer carried over
+    assert cs.due_checkpoint(12.1)
+    cs.restart_timer(12.1)
+    assert cs.due_checkpoint(22.2)
+    # losing a single worker on node 1 does NOT migrate again
+    cs.intercept_failure([2])
+    assert cs.primary.node == 1
+    # but losing the rest of node 1 does
+    cs.intercept_failure([3])
+    assert cs.primary.node == 2 and cs.due_checkpoint(30.0)

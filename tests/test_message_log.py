@@ -1,7 +1,7 @@
 """Sender-based message logging: exactly-once under replay (paper §6.3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.message_log import LoggedMessage, ReceiverCursor, SenderLog
 

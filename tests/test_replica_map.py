@@ -1,6 +1,6 @@
 """Replica-map algebra: unit + property tests (paper §3.2, §6.2)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.replica_map import ApplicationDead, ReplicaMap
 
@@ -57,6 +57,34 @@ def test_node_failure_survivable():
     assert all(e["kind"] == "promote" for e in events)
     rm.check_invariants()
     assert rm.cmp_group() == [4, 5, 2, 3]
+
+
+def test_fail_many_processes_all_deaths_and_attaches_events():
+    """A fatal batch still applies/keeps the survivable repairs, reports
+    every dead rank, and leaves the map consistent for restart_map."""
+    rm = ReplicaMap(4, 4)
+    # worker 0 (cmp rank 0) promotes; rank 1 loses both copies (1 and 5)
+    with pytest.raises(ApplicationDead) as ei:
+        rm.fail_many([0, 1, 5])
+    exc = ei.value
+    assert [e["kind"] for e in exc.events] == ["promote", "rank_dead"]
+    assert exc.events[0]["promoted"] == 4
+    assert exc.dead_ranks == [1]
+    # all deaths recorded, promotion applied, dead rank fully cleared
+    assert rm.dead == {0, 1, 5}
+    assert rm.cmp[0] == 4 and rm.cmp[1] is None and rm.rep[1] is None
+    nm = rm.restart_map(len(rm.alive()))
+    nm.check_invariants()
+
+
+def test_fail_many_multiple_dead_ranks():
+    rm = ReplicaMap(3, 3)
+    with pytest.raises(ApplicationDead) as ei:
+        rm.fail_many([0, 3, 1, 4, 2])      # ranks 0,1 pair-dead; rank 2 promotes
+    assert sorted(ei.value.dead_ranks) == [0, 1]
+    assert any(e["kind"] == "promote" and e["rank"] == 2
+               for e in ei.value.events)
+    assert rm.cmp[2] == 5
 
 
 def test_restart_map_elastic():
