@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint check bench
+.PHONY: test lint check bench bench-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -17,5 +17,10 @@ lint:
 
 check: lint test
 
+# -m so the benchmarks package resolves from the repo root
 bench:
-	$(PY) benchmarks/run.py
+	$(PY) -m benchmarks.run
+
+# the cheap failure-pipeline subset CI runs on every push
+bench-smoke:
+	$(PY) -m benchmarks.run --only fig13_log_replay --only fig9_time_distribution

@@ -163,8 +163,7 @@ def run_calibrated(app_name: str, procs: int, mtbf_s: float,
             horizon, alive_workers=range(n_workers))
     with tempfile.TemporaryDirectory() as d:
         rt = SimRuntime(app, ft, costs=costs, ckpt_dir=d,
-                        failure_events=events, workers_per_node=2,
-                        seed=seed)
+                        failure_events=events, workers_per_node=2)
         res = rt.run(steps)
     t = res.time
     eff = res.efficiency

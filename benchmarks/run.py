@@ -1,17 +1,36 @@
 """Benchmark harness: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV (the repo contract)."""
+Prints ``name,us_per_call,derived`` CSV (the repo contract).
+
+``--only NAME`` (repeatable) restricts the run to the named modules —
+the CI smoke job runs the cheap ones to catch comm-layer regressions.
+"""
+import argparse
 import sys
 import time
 import traceback
 
 
-def main() -> None:
-    from benchmarks import (fig7_8_hpcg, fig9_time_distribution,
-                            fig10_overhead, fig11_12_apps, fig13_log_replay,
-                            roofline_report, table1_intervals)
-    modules = [table1_intervals, fig7_8_hpcg, fig9_time_distribution,
-               fig10_overhead, fig11_12_apps, fig13_log_replay,
-               roofline_report]
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", action="append", default=None, metavar="NAME",
+                    help="run only this module (repeatable), e.g. "
+                         "--only fig13_log_replay")
+    args = ap.parse_args(argv)
+
+    # import lazily AFTER applying --only: some modules pull in jax at
+    # import time (fig10 -> launch.train), and the CI smoke environment
+    # only installs numpy
+    names = ["table1_intervals", "fig7_8_hpcg", "fig9_time_distribution",
+             "fig10_overhead", "fig11_12_apps", "fig13_log_replay",
+             "roofline_report"]
+    if args.only:
+        unknown = [n for n in args.only if n not in names]
+        if unknown:
+            sys.exit(f"unknown benchmark module(s) {unknown}; "
+                     f"choose from {sorted(names)}")
+        names = list(args.only)
+    import importlib
+    modules = [importlib.import_module(f"benchmarks.{n}") for n in names]
     print("name,us_per_call,derived")
     failed = 0
     for mod in modules:

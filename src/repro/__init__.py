@@ -7,6 +7,11 @@ Layers:
   repro.core        - the paper's mechanisms the FT layer is built from
                       (replica map, coordinators, message log, recovery
                       planner, Young-Daly policy; FTTrainer compat shim)
+  repro.comm        - the layered replica-aware communication subsystem:
+                      transport (routing/logging/dedup), collectives
+                      (CollectiveEngine: allreduce/barrier/bcast/gather/
+                      reduce_scatter/alltoall), recovery (drain + replay)
+                      (see docs/comm_api.md)
   repro.models      - all 10 assigned architectures
   repro.kernels     - Pallas TPU kernels (flash attention, rmsnorm, mamba scan)
   repro.distributed - sharding rules, replica-aware collectives

@@ -7,19 +7,17 @@ Per step (the classic PIC loop the paper ran):
   3. field solve - global FFT-free Poisson solve via parallel cumulative
      sums (allreduce) on the 1-D mean field,
   4. push     - gather E at particle positions, advance velocities/positions,
-  5. migrate  - particles crossing slab boundaries are SENT to the owning
-     neighbour (variable-size payloads — the interesting case for
-     sender-based message logging and replay).
-
-Migration uses wildcard receives (`recv_any`) so the MPI_ANY_SOURCE
-ordering machinery (cmp picks, replica follows) is exercised too.
+  5. migrate  - particles crossing slab boundaries are shipped to their new
+     owner with one ``alltoall`` of per-destination particle blocks
+     (variable-size payloads — the interesting case for sender-based
+     message logging and replay; the collective decomposes into logged
+     point-to-point sends in repro.comm.collectives, MPI_Alltoallv-style).
 """
 from __future__ import annotations
 
 import numpy as np
 
 TAG_GUARD = 3
-TAG_MIG = 4
 
 
 class PIC:
@@ -90,23 +88,18 @@ class PIC:
         pos = pos + 0.1 * vel
         pos = np.mod(pos, L)                       # periodic domain
 
-        # 5. migrate: ship particles that left the slab to their new owner
+        # 5. migrate: one alltoall of per-destination particle blocks (the
+        # classic MPI_Alltoallv migration idiom) — any rank can receive
+        # from any other, so no long-range-stray guard is needed
         owner = np.floor(pos / nc).astype(np.int64) % n
-        stay = owner == rank
         if n > 1:
-            for nbr in sorted({left, right}):
-                sel = owner == nbr
-                payload = np.stack([pos[sel], vel[sel]])
-                yield ("send", int(nbr), TAG_MIG, payload)
-            # drop long-range strays (cannot happen at CFL speeds; guard)
-            keepable = stay | (owner == left) | (owner == right)
-            pos, vel = pos[stay], vel[stay]
-            n_nbrs = len({left, right})
-            for _ in range(n_nbrs):
-                src, payload = yield ("recv_any", TAG_MIG)
-                if payload.shape[1]:
-                    pos = np.concatenate([pos, payload[0]])
-                    vel = np.concatenate([vel, payload[1]])
+            blocks = []
+            for d in range(n):
+                sel = owner == d
+                blocks.append(np.stack([pos[sel], vel[sel]]))
+            got = yield ("alltoall", blocks)
+            pos = np.concatenate([b[0] for b in got])
+            vel = np.concatenate([b[1] for b in got])
         # canonical order: sort by position then velocity so the state is
         # permutation-independent (bitwise-reproducible across failover)
         order = np.lexsort((vel, pos))

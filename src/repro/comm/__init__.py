@@ -1,0 +1,35 @@
+"""Layered replica-aware communication subsystem (the paper's §5-§6).
+
+Three layers, each usable on its own:
+
+  transport   - point-to-point routing with the paper's parallel
+                communication scheme: cmp->cmp and rep->rep sends in
+                parallel, intercomm fill-in when one side is unreplicated,
+                replica-side skip, MPI_ANY_SOURCE forwarding, sender-based
+                logging with piggybacked send-IDs.
+  collectives - a registry-based CollectiveEngine: allreduce/barrier as
+                switchboard collectives (paper §5 role-aware matching) and
+                bcast/gather/reduce_scatter/alltoall as explicit algorithms
+                over the transport (so they inherit logging + replay);
+                plus ReferenceCollectives, the failure-free straight-line
+                matcher shared with repro.ft.SimAppWorkload.
+  recovery    - failure-time drain of in-flight messages and sender-log
+                replay with send-ID dedup (exactly-once, paper §6.3).
+
+SimRuntime (repro.simrt) is a thin scheduler over these layers; other
+drivers (repro.ft, custom harnesses) can reuse them directly.  See
+docs/comm_api.md for the contracts.
+"""
+from repro.comm.collectives import (COLLECTIVE_OPS, CollectiveEngine,
+                                    ReferenceCollectives, combine,
+                                    reference_result)
+from repro.comm.recovery import RecoveryManager
+from repro.comm.transport import (NOTHING, P2P_OPS, Endpoint,
+                                  ReplicaTransport)
+
+__all__ = [
+    "Endpoint", "ReplicaTransport", "P2P_OPS", "NOTHING",
+    "CollectiveEngine", "ReferenceCollectives", "COLLECTIVE_OPS",
+    "combine", "reference_result",
+    "RecoveryManager",
+]

@@ -1,0 +1,424 @@
+"""Collective engine over the replica-aware transport.
+
+Two implementation families, one registry:
+
+  * switchboard collectives (``allreduce``, ``barrier``) match role-tagged
+    contributions directly — the paper's §5 rule: a computational worker's
+    result combines the computational contributions; a replica's result
+    combines replica contributions plus the no-replica computational ones
+    (delivered over the intercomm in the real library).  A promoted
+    worker's old-role contribution counts for its new role (same value by
+    construction).  Combining is memoized per (instance, role-view) and
+    vectorized for array payloads, so an N-worker world performs each
+    reduction once, not once per worker.
+
+  * transport collectives (``bcast``, ``gather``, ``reduce_scatter``,
+    ``alltoall``) decompose into explicit point-to-point sends over the
+    transport on reserved negative tags.  They therefore inherit the full
+    §5/§6 fault story for free: parallel cmp/rep paths, intercomm fill-in,
+    sender-based logging, replay, and send-ID dedup.
+
+Adding a collective means registering one ``CollectiveOp`` subclass — no
+scheduler changes.  ``ReferenceCollectives`` is the failure-free
+straight-line matcher (shared by repro.ft.SimAppWorkload and the tests'
+numpy references); ``reference_result`` defines the semantics of every
+collective in one place.
+
+Op vocabulary (generator yields):
+
+    ("allreduce", value, redop)            -> combined value, all ranks
+    ("barrier",)                           -> None, all ranks
+    ("bcast", value, root)                 -> root's value, all ranks
+    ("gather", value, root)                -> [v_0..v_{n-1}] at root, None elsewhere
+    ("reduce_scatter", chunks, redop)      -> combine of chunk[rank] across ranks
+    ("alltoall", chunks)                   -> [chunk_from_0..chunk_from_{n-1}]
+
+``chunks`` is a length-n sequence indexed by destination rank.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.comm.transport import NOTHING, Endpoint, ReplicaTransport
+
+# reserved tag space for transport collectives (apps use tags >= 0)
+TAG_BCAST = -11
+TAG_GATHER = -12
+TAG_REDUCE_SCATTER = -13
+TAG_ALLTOALL = -14
+
+_REDOPS = {"sum": np.add, "max": np.maximum, "min": np.minimum}
+
+
+def combine(redop: str, values) -> Any:
+    """Reduce ``values`` in index order. Array payloads of a common shape
+    are combined with one vectorized ufunc reduce over the stacked axis
+    (bitwise-identical to the sequential fold for ndim >= 1 — numpy's
+    outer-axis reduction is a row-by-row accumulation); scalars and ragged
+    payloads fall back to the sequential fold."""
+    ufunc = _REDOPS.get(redop)
+    if ufunc is None:
+        raise ValueError(f"unknown reduction op {redop!r}")
+    values = list(values)
+    if len(values) > 2 and all(
+            isinstance(v, np.ndarray) and v.ndim >= 1
+            and v.shape == values[0].shape and v.dtype == values[0].dtype
+            for v in values):
+        return ufunc.reduce(np.stack(values), axis=0)
+    out = values[0]
+    for v in values[1:]:
+        out = ufunc(out, v) if redop != "sum" else out + v
+    return out
+
+
+def reference_result(kind: str, votes: Dict[int, Any], rank: int, n: int,
+                     meta=None):
+    """Straight-line semantics of every collective, given the full
+    contribution table ``votes[src_rank]``. The single source of truth the
+    replicated engine, the sequential resolver, and the tests share."""
+    if kind == "barrier":
+        return None
+    if kind == "allreduce":
+        return combine(meta, [votes[r] for r in range(n)])
+    if kind == "bcast":
+        return copy.deepcopy(votes[meta])
+    if kind == "gather":
+        return [copy.deepcopy(votes[r]) for r in range(n)] \
+            if rank == meta else None
+    if kind == "reduce_scatter":
+        return combine(meta, [votes[s][rank] for s in range(n)])
+    if kind == "alltoall":
+        return [copy.deepcopy(votes[s][rank]) for s in range(n)]
+    raise ValueError(f"unknown collective {kind!r}")
+
+
+# --------------------------------------------------------------------------
+# collective ops (registry entries)
+# --------------------------------------------------------------------------
+
+class CollectiveOp:
+    """One collective's intake + resolution strategy."""
+
+    kind: str = ""
+
+    def post(self, engine: "CollectiveEngine", ep: Endpoint, role: str,
+             rank: int, op: tuple, step: int) -> tuple:
+        raise NotImplementedError
+
+    def resolve(self, engine: "CollectiveEngine", ep: Endpoint, role: str,
+                rank: int, pend: tuple):
+        raise NotImplementedError
+
+
+class _SwitchboardOp(CollectiveOp):
+    """Matches role-tagged contributions in the engine's table (no
+    messages): the §5 role-aware completion rule with promotion fallback."""
+
+    def _key(self, engine, ep, op, step) -> tuple:
+        idx = ep.op_index
+        ep.op_index += 1
+        return (self.kind, step, idx) + self._key_extra(op)
+
+    def _key_extra(self, op) -> tuple:
+        return ()
+
+
+class AllreduceOp(_SwitchboardOp):
+    kind = "allreduce"
+
+    def _key_extra(self, op):
+        return (op[2],)                      # redop
+
+    def post(self, engine, ep, role, rank, op, step):
+        _, value, redop = op
+        key = self._key(engine, ep, op, step)
+        engine.contrib.setdefault(key, {})[(role, rank)] = \
+            copy.deepcopy(value)
+        return ("collective", key, redop)
+
+    def resolve(self, engine, ep, role, rank, pend):
+        _, key, redop = pend
+        votes = engine.contrib.get(key, {})
+        need = engine.role_view(role)
+        if any(k not in votes for k in need):
+            # promotion fallback: a promoted worker's old rep contribution
+            # counts as cmp (same value by construction)
+            missing = [k for k in need if k not in votes]
+            for mk in missing:
+                alt = ("rep" if mk[0] == "cmp" else "cmp", mk[1])
+                if alt not in votes:
+                    return NOTHING
+                votes[mk] = votes[alt]
+        memo_key = (key, need)
+        out = engine.combined.get(memo_key)
+        if out is None:
+            out = combine(redop, [votes[k] for k in need])
+            engine.combined[memo_key] = out
+        # each worker gets its own array (matching the pre-memoization
+        # contract): an app mutating its result in place must not corrupt
+        # the memo or its same-role peers
+        return out.copy() if isinstance(out, np.ndarray) else out
+
+
+class BarrierOp(_SwitchboardOp):
+    kind = "barrier"
+
+    def post(self, engine, ep, role, rank, op, step):
+        key = self._key(engine, ep, op, step)
+        engine.contrib.setdefault(key, {})[rank] = (role, True)
+        return ("collective", key, None)
+
+    def resolve(self, engine, ep, role, rank, pend):
+        _, key, _ = pend
+        votes = engine.contrib.get(key, {})
+        if set(votes) != set(range(engine.n)):
+            return NOTHING
+        return None
+
+
+class _TransportOp(CollectiveOp):
+    """Base for collectives that decompose into p2p sends over the
+    transport (and so are logged, replayed, and deduped like any send)."""
+
+    tag: int = 0
+
+    def _send(self, engine, ep, role, dst, payload, step):
+        engine.transport.send(ep, dst, self.tag, payload, step,
+                              log=(role == "cmp"))
+
+
+class BcastOp(_TransportOp):
+    kind = "bcast"
+    tag = TAG_BCAST
+
+    def post(self, engine, ep, role, rank, op, step):
+        _, value, root = op
+        if rank == root:
+            for dst in range(engine.n):
+                if dst != root:
+                    self._send(engine, ep, role, dst, value, step)
+            return ("bcast_done", copy.deepcopy(value))
+        return ("bcast_wait", root)
+
+    def resolve(self, engine, ep, role, rank, pend):
+        if pend[0] == "bcast_done":
+            return pend[1]
+        _, root = pend
+        m = engine.transport.match_recv(ep, root, self.tag)
+        return m.payload if m is not None else NOTHING
+
+
+class GatherOp(_TransportOp):
+    kind = "gather"
+    tag = TAG_GATHER
+
+    def post(self, engine, ep, role, rank, op, step):
+        _, value, root = op
+        if rank == root:
+            return ("gather_wait", root, {root: copy.deepcopy(value)})
+        self._send(engine, ep, role, root, value, step)
+        return ("gather_done",)
+
+    def resolve(self, engine, ep, role, rank, pend):
+        if pend[0] == "gather_done":
+            return None
+        _, _root, got = pend
+        for s in range(engine.n):
+            if s not in got:
+                m = engine.transport.match_recv(ep, s, self.tag)
+                if m is not None:
+                    got[s] = m.payload
+        if len(got) < engine.n:
+            return NOTHING
+        return [got[s] for s in range(engine.n)]
+
+
+class _ScatterWaitAllOp(_TransportOp):
+    """Send chunk[dst] to every other rank, keep the own chunk, wait for
+    one message from every peer — the dense exchange both reduce_scatter
+    and alltoall are built on."""
+
+    def _chunks(self, op):
+        return op[1]
+
+    def post(self, engine, ep, role, rank, op, step):
+        chunks = self._chunks(op)
+        if len(chunks) != engine.n:
+            raise ValueError(
+                f"{self.kind} needs one chunk per rank "
+                f"({engine.n}), got {len(chunks)}")
+        for dst in range(engine.n):
+            if dst != rank:
+                self._send(engine, ep, role, dst, chunks[dst], step)
+        return (f"{self.kind}_wait", self._meta(op),
+                {rank: copy.deepcopy(chunks[rank])})
+
+    def _meta(self, op):
+        return None
+
+    def resolve(self, engine, ep, role, rank, pend):
+        _, meta, got = pend
+        for s in range(engine.n):
+            if s not in got:
+                m = engine.transport.match_recv(ep, s, self.tag)
+                if m is not None:
+                    got[s] = m.payload
+        if len(got) < engine.n:
+            return NOTHING
+        return self._finish(meta, [got[s] for s in range(engine.n)])
+
+    def _finish(self, meta, parts):
+        raise NotImplementedError
+
+
+class ReduceScatterOp(_ScatterWaitAllOp):
+    kind = "reduce_scatter"
+    tag = TAG_REDUCE_SCATTER
+
+    def _meta(self, op):
+        return op[2]                         # redop
+
+    def _finish(self, redop, parts):
+        return combine(redop, parts)
+
+
+class AlltoallOp(_ScatterWaitAllOp):
+    kind = "alltoall"
+    tag = TAG_ALLTOALL
+
+    def _finish(self, meta, parts):
+        return parts
+
+
+COLLECTIVE_OPS: Dict[str, CollectiveOp] = {
+    op.kind: op for op in (AllreduceOp(), BarrierOp(), BcastOp(),
+                           GatherOp(), ReduceScatterOp(), AlltoallOp())
+}
+
+# pending-descriptor head -> handler; switchboard ops share the
+# "collective" head (the handler is recovered from the key's kind)
+_PENDING_OWNERS: Dict[str, Optional[CollectiveOp]] = {"collective": None}
+for _op in COLLECTIVE_OPS.values():
+    if not isinstance(_op, _SwitchboardOp):
+        for _head in (f"{_op.kind}_wait", f"{_op.kind}_done"):
+            _PENDING_OWNERS[_head] = _op
+
+
+class CollectiveEngine:
+    """Registry-dispatched collective matching over a transport."""
+
+    def __init__(self, transport: ReplicaTransport,
+                 ops: Optional[Dict[str, CollectiveOp]] = None):
+        self.transport = transport
+        self.ops = dict(COLLECTIVE_OPS if ops is None else ops)
+        self.n = transport.n
+        # switchboard state
+        self.contrib: Dict[tuple, Dict] = {}
+        self.combined: Dict[tuple, Any] = {}
+        self._role_views: Dict[str, Tuple] = {}
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def begin_step(self) -> None:
+        """Collectives match within a step; drop the previous step's
+        tables (keys carry the step index, so this is pure GC) and reset
+        per-endpoint op counters."""
+        self.contrib.clear()
+        self.combined.clear()
+        self._role_views.clear()
+        for ep in self.transport.endpoints.values():
+            ep.op_index = 0
+
+    def world_changed(self) -> None:
+        """Replica map mutated (promotion / drop / restart): role views and
+        memoized combines are stale."""
+        self._role_views.clear()
+        self.combined.clear()
+
+    def role_view(self, role: str) -> Tuple:
+        """The §5 completion rule: which (role, rank) contributions form
+        this role's allreduce result."""
+        view = self._role_views.get(role)
+        if view is None:
+            rmap = self.transport.rmap
+            view = tuple(
+                ("cmp", r) if role == "cmp" or rmap.rep[r] is None
+                else ("rep", r)
+                for r in range(self.n))
+            self._role_views[role] = view
+        return view
+
+    # -- dispatch ----------------------------------------------------------
+
+    def owns(self, kind: str) -> bool:
+        return kind in self.ops
+
+    def owns_pending(self, pend: tuple) -> bool:
+        return pend[0] in _PENDING_OWNERS
+
+    def post(self, ep: Endpoint, op: tuple, step: int) -> tuple:
+        handler = self.ops.get(op[0])
+        if handler is None:
+            raise ValueError(f"unknown collective {op[0]!r}")
+        role, rank = self.transport.role_of(ep)
+        return handler.post(self, ep, role, rank, op, step)
+
+    def resolve(self, ep: Endpoint, pend: tuple):
+        head = pend[0]
+        handler = _PENDING_OWNERS.get(head)
+        if handler is None and head == "collective":
+            handler = self.ops[pend[1][0]]
+        if handler is None:
+            raise ValueError(f"unknown pending {head!r}")
+        role, rank = self.transport.role_of(ep)
+        return handler.resolve(self, ep, role, rank, pend)
+
+
+# --------------------------------------------------------------------------
+# failure-free reference matcher (sequential resolvers, tests)
+# --------------------------------------------------------------------------
+
+class ReferenceCollectives:
+    """Single-process collective matcher with straight-line semantics —
+    the resolver repro.ft.SimAppWorkload runs its apps on. No roles, no
+    replication, no messages: contributions keyed per (kind, instance),
+    results from ``reference_result``."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self.contrib: Dict[tuple, Dict[int, Any]] = {}
+        self.meta: Dict[tuple, Any] = {}
+        self.op_index: Dict[int, int] = {r: 0 for r in range(n)}
+
+    def post(self, rank: int, op: tuple) -> tuple:
+        """Record rank's contribution; returns the pending descriptor."""
+        kind = op[0]
+        idx = self.op_index[rank]
+        self.op_index[rank] = idx + 1
+        if kind == "barrier":
+            key, value, meta = (kind, idx), True, None
+        elif kind in ("allreduce", "reduce_scatter"):
+            _, value, redop = op
+            key, meta = (kind, idx, redop), redop
+        elif kind in ("bcast", "gather"):
+            _, value, root = op
+            key, meta = (kind, idx, root), root
+        elif kind == "alltoall":
+            key, value, meta = (kind, idx), op[1], None
+        else:
+            raise ValueError(f"unknown collective {kind!r}")
+        if kind != "barrier":
+            value = copy.deepcopy(value)
+        self.contrib.setdefault(key, {})[rank] = value
+        self.meta[key] = meta
+        return ("collective", key)
+
+    def resolve(self, rank: int, pend: tuple):
+        _, key = pend
+        votes = self.contrib.get(key, {})
+        if len(votes) < self.n:
+            return NOTHING
+        return reference_result(key[0], votes, rank, self.n, self.meta[key])

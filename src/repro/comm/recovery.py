@@ -1,0 +1,58 @@
+"""Failure-time message recovery (paper §6.3).
+
+When a computational worker dies and its replica is promoted, the promoted
+worker's view of the network is repaired in two moves:
+
+  * drain: in-flight messages of the current step are considered lost to
+    the network during the repair window and dropped from the inbox;
+  * replay: every surviving sender's log is scanned for messages addressed
+    to the promoted rank whose send-IDs the promoted worker's receive
+    cursor has not yet seen, and those are re-delivered.  Messages the
+    replica already consumed (it may be AHEAD of its dead twin) arrive as
+    duplicates and are skipped by the transport's send-ID dedup —
+    exactly-once delivery, the paper's §6.3 example.
+
+The manager only touches transport state; scheduling policy (when to
+drain, which workers were promoted) stays with the runtime.
+"""
+from __future__ import annotations
+
+import copy
+from collections import deque
+
+from repro.comm.transport import Endpoint, ReplicaTransport
+
+
+class RecoveryManager:
+    def __init__(self, transport: ReplicaTransport):
+        self.transport = transport
+        self.replays = 0
+
+    def drain_current_step(self, ep: Endpoint, step: int) -> None:
+        """Drop in-flight messages of the current step (network loss during
+        the repair window); older messages were already stable."""
+        ep.inbox = deque(m for m in ep.inbox if m.step < step)
+
+    def replay_to(self, ep: Endpoint) -> int:
+        """Re-deliver logged messages this endpoint has not consumed.
+        Returns the number of replayed messages."""
+        t = self.transport
+        _role, rank = t.role_of(ep)
+        have = {(m.src, m.dst, m.tag, m.send_id) for m in ep.inbox}
+        n_replayed = 0
+        for _src_rank, log in t.send_logs.items():
+            for m in log.replay_for(rank, ep.cursor.expected):
+                key = (m.src, m.dst, m.tag, m.send_id)
+                if key in have:
+                    continue
+                t.deliver(ep, copy.deepcopy(m))
+                n_replayed += 1
+        self.replays += n_replayed
+        return n_replayed
+
+    def repair_promoted(self, ep: Endpoint, step: int,
+                        drop_inflight: bool = True) -> int:
+        """The full promoted-worker repair: drain, then replay."""
+        if drop_inflight:
+            self.drain_current_step(ep, step)
+        return self.replay_to(ep)

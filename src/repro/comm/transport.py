@@ -1,0 +1,238 @@
+"""Replica-aware point-to-point transport (paper §5, §6.3).
+
+Owns the routing rules of FTHP-MPI's parallel communication scheme:
+
+  * a computational sender sends cmp->cmp and, when the destination is
+    replicated but the source is not, also fills in the replica copy over
+    the intercomm (cmp->rep);
+  * a replica sender sends rep->rep in parallel, and SKIPS the send when
+    the destination has no replica;
+  * every send carries a piggybacked send-ID per (src, dst, tag) stream —
+    cmp and rep advance the same counters because they execute identical
+    sends — and computational sends are recorded in the sender-based
+    message log for replay after failures;
+  * MPI_ANY_SOURCE: the computational receiver picks the message and
+    forwards its chosen (src, tag, send_id) order to the replica, which
+    consumes the same stream in the same order;
+  * receiver-side send-ID cursors drop duplicates (exactly-once).
+
+The transport knows nothing about scheduling, virtual time, checkpoints,
+or failure policy — those live in the runtime and repro.comm.recovery.
+"""
+from __future__ import annotations
+
+import copy
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.message_log import LoggedMessage, ReceiverCursor, SenderLog
+from repro.core.replica_map import ReplicaMap
+
+
+class _Nothing:
+    """Sentinel for "operation not yet satisfiable" (distinct from None,
+    which is a legal op result — e.g. a barrier's)."""
+
+    __repr__ = lambda self: "<NOTHING>"          # noqa: E731
+
+
+NOTHING = _Nothing()
+
+# op kinds the transport intakes / resolves on its own
+P2P_OPS = frozenset({"send", "exchange", "recv", "recv_any"})
+_P2P_PENDING = frozenset({"recv", "recv_any", "exchange_wait"})
+
+
+class Endpoint:
+    """Per-worker communication state: the part of a worker the comm
+    subsystem owns (the scheduler owns app state / generator / pending)."""
+
+    __slots__ = ("wid", "inbox", "cursor", "wc_consumed", "send_counters",
+                 "op_index")
+
+    def __init__(self, wid: int):
+        self.wid = wid
+        self.inbox: deque = deque()          # LoggedMessage arrivals (FIFO)
+        self.cursor = ReceiverCursor(wid)    # send-ID dedup cursor
+        self.wc_consumed = 0                 # wildcard-order cursor
+        # per-stream send-id counters: cmp and rep advance these identically
+        # because they execute identical sends (paper §6.3)
+        self.send_counters: Dict[Tuple[int, int, int], int] = {}
+        self.op_index = 0                    # collective-matching index
+
+
+class ReplicaTransport:
+    """Routing + matching over a ReplicaMap world.
+
+    ``rebind`` swaps the replica map after an elastic restart; endpoints are
+    registered by the scheduler for every alive worker.
+    """
+
+    def __init__(self, rmap: ReplicaMap, n_ranks: int,
+                 log_limit_bytes: int = 1 << 28):
+        self.rmap = rmap
+        self.n = n_ranks
+        self.send_logs = {r: SenderLog(r, log_limit_bytes)
+                          for r in range(n_ranks)}
+        # rank -> [(src, tag, send_id)]: the cmp-chosen wildcard order
+        self.wc_order: Dict[int, List[Tuple[int, int, int]]] = \
+            {r: [] for r in range(n_ranks)}
+        self.endpoints: Dict[int, Endpoint] = {}
+        self.duplicates_skipped = 0
+
+    # ------------------------------------------------------------ lifecycle
+
+    def register(self, wid: int) -> Endpoint:
+        ep = Endpoint(wid)
+        self.endpoints[wid] = ep
+        return ep
+
+    def drop(self, wid: int) -> None:
+        self.endpoints.pop(wid, None)
+
+    def rebind(self, rmap: ReplicaMap) -> None:
+        """Adopt a rebuilt world (elastic restart); endpoints re-register."""
+        self.rmap = rmap
+        self.endpoints = {}
+
+    def role_of(self, ep: Endpoint) -> Tuple[str, int]:
+        return self.rmap.role_of(ep.wid)
+
+    # -------------------------------------------------------------- sending
+
+    def deliver(self, ep: Endpoint, msg: LoggedMessage) -> None:
+        ep.inbox.append(msg)
+
+    def send(self, sender: Endpoint, dst_rank: int, tag: int, payload,
+             step: int, *, log: bool) -> None:
+        """Route one send per the paper's §5 parallel scheme."""
+        role, src_rank = self.rmap.role_of(sender.wid)
+        payload = copy.deepcopy(payload)
+        stream = (src_rank, dst_rank, tag)
+        sid = sender.send_counters.get(stream, 0)
+        sender.send_counters[stream] = sid + 1
+        if role == "cmp":
+            if log:
+                self.send_logs[src_rank].record(dst_rank, tag, payload,
+                                                step, send_id=sid)
+            msg = LoggedMessage(sid, src_rank, dst_rank, tag, payload, step)
+            self.deliver(self.endpoints[self.rmap.cmp[dst_rank]], msg)
+            # intercomm fill-in: destination replicated, source not
+            if self.rmap.rep[dst_rank] is not None and \
+                    self.rmap.rep[src_rank] is None:
+                self.deliver(self.endpoints[self.rmap.rep[dst_rank]],
+                             copy.deepcopy(msg))
+        else:  # replica sender
+            if self.rmap.rep[dst_rank] is not None:
+                msg = LoggedMessage(sid, src_rank, dst_rank, tag, payload,
+                                    step)
+                self.deliver(self.endpoints[self.rmap.rep[dst_rank]], msg)
+            # else: skip (paper: no replica destination -> source replica
+            # skips the send)
+
+    # ------------------------------------------------------------- matching
+
+    def match_recv(self, ep: Endpoint, src_rank: Optional[int],
+                   tag: int) -> Optional[LoggedMessage]:
+        """Find (and consume) the next matching inbox message; None if none.
+        Wildcard receives on replicas follow the rank's cmp-chosen order."""
+        role, rank = self.rmap.role_of(ep.wid)
+        if src_rank is None and role == "rep":
+            order = self.wc_order[rank]
+            if ep.wc_consumed >= len(order):
+                return None
+            want_src, want_tag, _want_sid = order[ep.wc_consumed]
+            got = self._take(ep, want_src, want_tag)
+            if got is None:
+                return None
+            ep.wc_consumed += 1
+            return got
+        got = self._take(ep, src_rank, tag)
+        if got is None:
+            return None
+        if src_rank is None and role == "cmp":
+            # record the chosen order and forward to the replica (paper §5)
+            self.wc_order[rank].append((got.src, got.tag, got.send_id))
+            ep.wc_consumed += 1
+        return got
+
+    def _take(self, ep: Endpoint, src_rank: Optional[int],
+              tag: int) -> Optional[LoggedMessage]:
+        for i, m in enumerate(ep.inbox):
+            if (src_rank is None or m.src == src_rank) and m.tag == tag:
+                if not ep.cursor.should_deliver(m):
+                    del ep.inbox[i]
+                    self.duplicates_skipped += 1
+                    return self._take(ep, src_rank, tag)
+                del ep.inbox[i]
+                return m
+        return None
+
+    # -------------------------------------------------------- op intake/resolve
+
+    def post(self, ep: Endpoint, op: tuple, step: int) -> Optional[tuple]:
+        """Intake a p2p op; returns a pending descriptor when blocked."""
+        kind = op[0]
+        role, _rank = self.rmap.role_of(ep.wid)
+        log = role == "cmp"
+        if kind == "send":
+            _, dst, tag, payload = op
+            self.send(ep, dst, tag, payload, step, log=log)
+            return None
+        if kind == "exchange":
+            _, outmap, tag = op
+            for dst, payload in sorted(outmap.items()):
+                self.send(ep, dst, tag, payload, step, log=log)
+            return ("exchange_wait", sorted(outmap.keys()), tag, {})
+        if kind == "recv":
+            _, src, tag = op
+            return ("recv", src, tag)
+        if kind == "recv_any":
+            _, tag = op
+            return ("recv_any", tag)
+        raise ValueError(f"not a p2p op: {kind!r}")
+
+    def owns_pending(self, pend: tuple) -> bool:
+        return pend[0] in _P2P_PENDING
+
+    def resolve(self, ep: Endpoint, pend: tuple):
+        """Attempt to complete a p2p pending; NOTHING while blocked."""
+        kind = pend[0]
+        if kind == "recv":
+            _, src, tag = pend
+            m = self.match_recv(ep, src, tag)
+            return m.payload if m is not None else NOTHING
+        if kind == "recv_any":
+            _, tag = pend
+            m = self.match_recv(ep, None, tag)
+            return (m.src, m.payload) if m is not None else NOTHING
+        if kind == "exchange_wait":
+            _, srcs, tag, got = pend
+            for s in srcs:
+                if s not in got:
+                    m = self.match_recv(ep, s, tag)
+                    if m is not None:
+                        got[s] = m.payload
+            return got if len(got) == len(srcs) else NOTHING
+        raise ValueError(f"not a p2p pending: {kind!r}")
+
+    # ------------------------------------------------- checkpointable state
+
+    def snapshot_rank(self, rank: int, ep: Endpoint) -> dict:
+        """The comm half of a rank-level checkpoint (paper §3.3): log,
+        cursor, wildcard order, send counters — app state stays with the
+        scheduler."""
+        return {
+            "cursor": ep.cursor.state(),
+            "send_log": self.send_logs[rank].state(),
+            "wc_order": list(self.wc_order[rank]),
+            "wc_consumed": ep.wc_consumed,
+            "send_counters": dict(ep.send_counters),
+        }
+
+    def load_rank(self, rank: int, ep: Endpoint, data: dict) -> None:
+        ep.cursor.load_state(data["cursor"])
+        ep.wc_consumed = data["wc_consumed"]
+        ep.send_counters = dict(data["send_counters"])
+        self.send_logs[rank].load_state(data["send_log"])
+        self.wc_order[rank] = list(data["wc_order"])

@@ -123,7 +123,10 @@ class SimAppWorkload:
     The resolver here is intentionally the *failure-free* subset of the op
     protocol (no roles, no message logging, no mid-step kills) — simrt's
     SimRuntime remains the authoritative implementation of the full
-    replicated protocol; keep the op vocabulary in sync with its _intake.
+    replicated protocol.  Collectives (allreduce/barrier/bcast/gather/
+    reduce_scatter/alltoall) share their semantics with the replicated
+    CollectiveEngine through ``repro.comm.ReferenceCollectives``, so the
+    two resolvers cannot drift.
     """
 
     disk_checkpointable = False
@@ -142,12 +145,13 @@ class SimAppWorkload:
     # -- sequential op resolver ---------------------------------------------
 
     def step(self, states, t):
+        from repro.comm import NOTHING, ReferenceCollectives
+
         gens = {r: self.app.step(r, states[r], t) for r in range(self.n)}
         inbox: Dict[int, deque] = {r: deque() for r in range(self.n)}
         pending: Dict[int, Optional[tuple]] = {r: None for r in range(self.n)}
         done: Dict[int, Any] = {}
-        contrib: Dict[tuple, Dict[int, Any]] = {}
-        op_index = {r: 0 for r in range(self.n)}
+        coll = ReferenceCollectives(self.n)
 
         def deliver(dst, src, tag, payload):
             inbox[dst].append((src, tag, copy.deepcopy(payload)))
@@ -176,28 +180,17 @@ class SimAppWorkload:
                 return ("recv", op[1], op[2])
             if kind == "recv_any":
                 return ("recv_any", op[1])
-            if kind in ("allreduce", "barrier"):
-                idx = op_index[rank]
-                op_index[rank] += 1
-                if kind == "barrier":
-                    key = ("barrier", idx)
-                    contrib.setdefault(key, {})[rank] = True
-                    return ("collective", key, None)
-                _, value, redop = op
-                key = ("allreduce", idx, redop)
-                contrib.setdefault(key, {})[rank] = copy.deepcopy(value)
-                return ("collective", key, redop)
-            raise ValueError(f"unknown op {kind!r}")
+            return coll.post(rank, op)       # any registered collective
 
         def resolve(rank, pend):
-            """Attempt to complete ``pend``; _NOTHING when still blocked."""
+            """Attempt to complete ``pend``; NOTHING when still blocked."""
             kind = pend[0]
             if kind == "recv":
                 got = take(rank, pend[1], pend[2])
-                return got[1] if got is not None else _NOTHING
+                return got[1] if got is not None else NOTHING
             if kind == "recv_any":
                 got = take(rank, None, pend[1])
-                return got if got is not None else _NOTHING
+                return got if got is not None else NOTHING
             if kind == "exchange_wait":
                 _, srcs, tag, got = pend
                 for s in srcs:
@@ -205,26 +198,9 @@ class SimAppWorkload:
                         m = take(rank, s, tag)
                         if m is not None:
                             got[s] = m[1]
-                return got if len(got) == len(srcs) else _NOTHING
+                return got if len(got) == len(srcs) else NOTHING
             if kind == "collective":
-                _, key, redop = pend
-                votes = contrib.get(key, {})
-                if len(votes) < self.n:
-                    return _NOTHING
-                if key[0] == "barrier":
-                    return None
-                vals = [votes[r] for r in range(self.n)]
-                out = vals[0]
-                for v in vals[1:]:
-                    if redop == "sum":
-                        out = out + v
-                    elif redop == "max":
-                        out = np.maximum(out, v)
-                    elif redop == "min":
-                        out = np.minimum(out, v)
-                    else:
-                        raise ValueError(redop)
-                return out
+                return coll.resolve(rank, pend)
             raise ValueError(kind)
 
         while len(done) < self.n:
@@ -236,7 +212,7 @@ class SimAppWorkload:
                     send_val = None
                 else:
                     send_val = resolve(r, pending[r])
-                    if send_val is _NOTHING:
+                    if send_val is NOTHING:
                         continue
                     pending[r] = None
                 try:
@@ -254,10 +230,3 @@ class SimAppWorkload:
                 raise RuntimeError(f"deadlock at step {t}: {blocked}")
 
         return {r: done[r] for r in range(self.n)}, None
-
-
-class _Nothing:
-    __repr__ = lambda self: "<NOTHING>"          # noqa: E731
-
-
-_NOTHING = _Nothing()

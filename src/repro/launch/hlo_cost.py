@@ -345,9 +345,13 @@ class HloCostAnalyzer:
             return r
 
         if oc in ("call", "map"):
+            # the called computation's ops carry all the cost; charging the
+            # call site's operands too would bill a while body's full loop
+            # state (e.g. a scanned 16 MB stack) once per trip on top
             m2 = re.search(r"to_apply=%?([\w.\-]+)", op.line)
             if m2:
                 r.add(self._comp_cost(m2.group(1), count_bytes))
+            return r
 
         if oc in _COLLECTIVES or (oc.endswith("-start") and
                                   oc[:-6] in _COLLECTIVES):

@@ -2,22 +2,18 @@
 executed with real numerics on one machine.
 
 Logical MPI workers are Python generators that yield communication ops; the
-runtime is the scheduler + network + coordinator + failure injector. It
-implements, faithfully to FTHP-MPI:
+runtime is the SCHEDULER: it pumps generators, accounts virtual time (the
+paper's Fig 9 components), orchestrates checkpoints and elastic restarts,
+and fires failure events.  Everything message-shaped lives in the layered
+``repro.comm`` subsystem:
 
-  * partial/full replication with the paper's parallel communication scheme
-    (cmp->cmp and rep->rep in parallel; intercomm fill-in when one side has
-    no replica; replica-side skip when the destination has no replica),
-  * MPI_ANY_SOURCE ordering: the computational receiver picks the message
-    and forwards (src, tag) to its replica, which receives the same stream,
-  * sender-based message logging with piggybacked send-IDs; on failure the
-    network is drained, lost messages are replayed from sender logs and
-    duplicates are skipped by send-ID (exactly-once),
-  * coordinated checkpointing (baseline + incremental, Young-Daly timer on
-    the primary coordinator) and elastic restart (possibly with a lower
-    replication degree) when both copies of a rank die,
-  * communicator shrinking + replica promotion on worker/node failure, in
-    virtual time with the paper's cost model (Fig 9 time components).
+  repro.comm.transport   - replica-aware routing (parallel cmp->cmp and
+                           rep->rep paths, intercomm fill-in, replica-side
+                           skip, MPI_ANY_SOURCE forwarding, sender-based
+                           logging, send-ID dedup),
+  repro.comm.collectives - the CollectiveEngine (allreduce/barrier plus
+                           bcast/gather/reduce_scatter/alltoall),
+  repro.comm.recovery    - failure-time drain + sender-log replay.
 
 Apps (repro.apps.*) write worker-local code:
 
@@ -25,6 +21,7 @@ Apps (repro.apps.*) write worker-local code:
         ...
         got = yield ("exchange", {nbr: payload}, TAG)
         total = yield ("allreduce", local, "sum")
+        parts = yield ("alltoall", per_dest_chunks)
         return new_state
 """
 from __future__ import annotations
@@ -33,17 +30,16 @@ import copy
 import os
 import pickle
 import time as _time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
 
-import numpy as np
-
+from repro.comm import (NOTHING, CollectiveEngine, P2P_OPS, RecoveryManager,
+                        ReplicaTransport)
+from repro.comm.transport import Endpoint
 from repro.configs.base import FTConfig
 from repro.core import ckpt_policy
 from repro.core.coordinator import ClusterTopology, CoordinatorSet
 from repro.core.failure_sim import FailureEvent
-from repro.core.message_log import LoggedMessage, ReceiverCursor, SenderLog
 from repro.core.replica_map import ApplicationDead, ReplicaMap
 
 
@@ -103,24 +99,18 @@ class CostModel:
 
 
 class _Worker:
-    __slots__ = ("wid", "state", "cursor", "gen", "pending", "waiting",
-                 "op_index", "inbox", "wc_consumed", "done", "send_counters")
+    """Scheduling state for one logical worker; comm state lives in the
+    transport's Endpoint."""
 
-    def __init__(self, wid: int, state):
+    __slots__ = ("wid", "state", "gen", "pending", "done", "ep")
+
+    def __init__(self, wid: int, state, ep: Endpoint):
         self.wid = wid
         self.state = state
-        self.cursor = ReceiverCursor(wid)
+        self.ep = ep
         self.gen = None
         self.pending = None          # op tuple currently blocking this worker
-        self.waiting = False
-        self.op_index = 0            # collective-matching index within a step
-        self.inbox: deque = deque()  # LoggedMessage arrivals (FIFO)
-        self.wc_consumed = 0         # wildcard-order cursor (rank stream)
         self.done = False
-        # per-stream send-id counters: cmp and rep advance these identically
-        # because they execute identical sends — the piggybacked send-id is
-        # therefore consistent across the two copies (paper §6.3)
-        self.send_counters: Dict[Tuple[int, int, int], int] = {}
 
 
 class SimRuntime:
@@ -129,8 +119,7 @@ class SimRuntime:
                  failure_events: List[FailureEvent] = None,
                  injector=None,
                  respawn_on_restart: bool = True,
-                 drop_inflight_on_failure: bool = True,
-                 seed: int = 0):
+                 drop_inflight_on_failure: bool = True):
         self.app = app
         self.ft = ft
         self.n = app.n_ranks
@@ -142,7 +131,6 @@ class SimRuntime:
         self.ckpt_dir = ckpt_dir
         self.respawn = respawn_on_restart
         self.drop_inflight = drop_inflight_on_failure
-        self.rng = np.random.default_rng(seed)
 
         interval = ft.ckpt_interval_s or ckpt_policy.young_daly_interval(
             max(ft.mtbf_s, 1e-9), self.costs.ckpt_cost_s) \
@@ -158,18 +146,17 @@ class SimRuntime:
             injector if injector is not None else failure_events)
         self._injector_prepared = False
 
-        # rank-level logs: the sender-based message log (owned by the cmp
-        # worker; part of the replication payload in a real deployment)
-        self.send_logs = {r: SenderLog(r, ft.message_log_limit_bytes)
-                          for r in range(self.n)}
-        self.wc_order: Dict[int, List[Tuple[int, int, int]]] = \
-            {r: [] for r in range(self.n)}   # rank -> [(src, tag, send_id)]
-        self._arrival_counter = 0
+        # the layered comm subsystem (repro.comm)
+        self.transport = ReplicaTransport(self.rmap, self.n,
+                                          ft.message_log_limit_bytes)
+        self.engine = CollectiveEngine(self.transport)
+        self.recovery = RecoveryManager(self.transport)
 
         self.workers: Dict[int, _Worker] = {}
         for w in self.rmap.alive():
             role, rank = self.rmap.role_of(w)
-            self.workers[w] = _Worker(w, app.init_state(rank))
+            self.workers[w] = _Worker(w, app.init_state(rank),
+                                      self.transport.register(w))
 
         self.t = 0.0
         self.step_idx = 0
@@ -188,18 +175,14 @@ class SimRuntime:
         return os.path.join(self.ckpt_dir, f"{kind}_rank{rank}.pkl")
 
     def _snapshot(self) -> dict:
-        """Rank-level snapshot: app state + log/cursor/wildcard state —
+        """Rank-level snapshot: app state + the transport's comm state —
         written only by computational workers (paper §3.3 incremental)."""
         snap = {"step": self.step_idx, "ranks": {}}
         for r in range(self.n):
             w = self.workers[self.rmap.cmp[r]]
             snap["ranks"][r] = {
                 "state": copy.deepcopy(w.state),
-                "cursor": w.cursor.state(),
-                "send_log": self.send_logs[r].state(),
-                "wc_order": list(self.wc_order[r]),
-                "wc_consumed": w.wc_consumed,
-                "send_counters": dict(w.send_counters),
+                **self.transport.snapshot_rank(r, w.ep),
             }
         return snap
 
@@ -218,7 +201,7 @@ class SimRuntime:
             self.result.time.ckpt_write += self.costs.ckpt_cost_s
             self.t += self.costs.ckpt_cost_s
             # checkpoint boundary: trim message logs (log removal component)
-            for log in self.send_logs.values():
+            for log in self.transport.send_logs.values():
                 log.trim_before_step(self.step_idx)
             self.result.time.log_removal += self.costs.log_removal_cost_s
             self.t += self.costs.log_removal_cost_s
@@ -236,98 +219,27 @@ class SimRuntime:
                 with open(self._ckpt_path(r), "rb") as f:
                     ranks[r] = pickle.load(f)
             snap = {"step": ranks[0]["step"], "ranks": ranks}
-        rolled_back = self.step_idx - snap["step"]
 
         n_workers = self.rmap.world_size if self.respawn else \
             len(self.rmap.alive())
         self.rmap = self.rmap.restart_map(n_workers)
         self.topology = ClusterTopology(self.rmap.world_size,
                                         self.topology.workers_per_node)
+        self.transport.rebind(self.rmap)
+        self.engine.world_changed()
         self.workers = {}
         for w in self.rmap.alive():
             role, rank = self.rmap.role_of(w)
             data = snap["ranks"][rank]
-            nw = _Worker(w, copy.deepcopy(data["state"]))
-            nw.cursor.load_state(data["cursor"])
-            nw.wc_consumed = data["wc_consumed"]
-            nw.send_counters = dict(data["send_counters"])
+            nw = _Worker(w, copy.deepcopy(data["state"]),
+                         self.transport.register(w))
+            self.transport.load_rank(rank, nw.ep, data)
             self.workers[w] = nw
-        for r in range(self.n):
-            self.send_logs[r].load_state(snap["ranks"][r]["send_log"])
-            self.wc_order[r] = list(snap["ranks"][r]["wc_order"])
 
         self.step_idx = snap["step"]
         self.result.restarts += 1
         self.result.time.restore += self.costs.restore_cost_s
         self.t += self.costs.restore_cost_s
-
-    # --------------------------------------------------------------- routing
-
-    def _deliver(self, worker: _Worker, msg: LoggedMessage):
-        self._arrival_counter += 1
-        worker.inbox.append(msg)
-
-    def _route_send(self, sender: _Worker, dst_rank: int, tag: int,
-                    payload, log: bool):
-        """Implements the paper's §5 parallel communication scheme."""
-        role, src_rank = self.rmap.role_of(sender.wid)
-        payload = copy.deepcopy(payload)
-        stream = (src_rank, dst_rank, tag)
-        sid = sender.send_counters.get(stream, 0)
-        sender.send_counters[stream] = sid + 1
-        if role == "cmp":
-            if log:
-                self.send_logs[src_rank].record(dst_rank, tag, payload,
-                                                self.step_idx, send_id=sid)
-            msg = LoggedMessage(sid, src_rank, dst_rank, tag, payload,
-                                self.step_idx)
-            self._deliver(self.workers[self.rmap.cmp[dst_rank]], msg)
-            # intercomm fill-in: destination replicated, source not
-            if self.rmap.rep[dst_rank] is not None and \
-                    self.rmap.rep[src_rank] is None:
-                self._deliver(self.workers[self.rmap.rep[dst_rank]],
-                              copy.deepcopy(msg))
-        else:  # replica sender
-            if self.rmap.rep[dst_rank] is not None:
-                msg = LoggedMessage(sid, src_rank, dst_rank, tag, payload,
-                                    self.step_idx)
-                self._deliver(self.workers[self.rmap.rep[dst_rank]], msg)
-            # else: skip (paper: no replica destination -> source replica
-            # skips the send)
-
-    def _match_recv(self, worker: _Worker, src_rank: Optional[int], tag: int):
-        """Find (and consume) the next matching inbox message; None if none.
-        Wildcard receives on replicas follow the rank's cmp-chosen order."""
-        role, rank = self.rmap.role_of(worker.wid)
-        if src_rank is None and role == "rep":
-            order = self.wc_order[rank]
-            if worker.wc_consumed >= len(order):
-                return None
-            want_src, want_tag, want_sid = order[worker.wc_consumed]
-            got = self._take(worker, want_src, want_tag)
-            if got is None:
-                return None
-            worker.wc_consumed += 1
-            return got
-        got = self._take(worker, src_rank, tag)
-        if got is None:
-            return None
-        if src_rank is None and role == "cmp":
-            # record the chosen order and forward to the replica (paper §5)
-            self.wc_order[rank].append((got.src, got.tag, got.send_id))
-            worker.wc_consumed += 1
-        return got
-
-    def _take(self, worker: _Worker, src_rank: Optional[int], tag: int):
-        for i, m in enumerate(worker.inbox):
-            if (src_rank is None or m.src == src_rank) and m.tag == tag:
-                if not worker.cursor.should_deliver(m):
-                    del worker.inbox[i]
-                    self.result.duplicates_skipped += 1
-                    return self._take(worker, src_rank, tag)
-                del worker.inbox[i]
-                return m
-        return None
 
     # --------------------------------------------------------------- failure
 
@@ -347,47 +259,33 @@ class SimRuntime:
             # both copies dead: elastic restart from the last checkpoint
             for w in victims:
                 self.workers.pop(w, None)
+                self.transport.drop(w)
             raise
         for w in victims:
             self.workers.pop(w, None)
+            self.transport.drop(w)
+        self.engine.world_changed()
         promoted = [e for e in events if e["kind"] == "promote"]
         self.result.promotions += len(promoted)
-        # drain + drop in-flight messages of the current step on promoted
-        # workers (network loss during repair), then replay from sender logs
+        # drain + replay on promoted workers (repro.comm.recovery)
         self.result.time.repair += self.costs.repair_cost_s
         self.t += self.costs.repair_cost_s
         for e in promoted:
-            w = self.workers[e["promoted"]]
-            if self.drop_inflight:
-                w.inbox = deque(m for m in w.inbox if m.step < self.step_idx)
-            self._replay_to(w)
-
-    def _replay_to(self, worker: _Worker):
-        """Resend logged messages this worker has not consumed (paper §6.3)."""
-        role, rank = self.rmap.role_of(worker.wid)
-        have = {(m.src, m.dst, m.tag, m.send_id) for m in worker.inbox}
-        for src_rank, log in self.send_logs.items():
-            for m in log.replay_for(rank, worker.cursor.expected):
-                key = (m.src, m.dst, m.tag, m.send_id)
-                if key in have:
-                    continue
-                self._deliver(worker, copy.deepcopy(m))
-                self.result.replays += 1
+            self.recovery.repair_promoted(self.workers[e["promoted"]].ep,
+                                          self.step_idx,
+                                          drop_inflight=self.drop_inflight)
 
     # ------------------------------------------------------------------ step
 
     def _run_step(self):
         """Advance every alive worker through one application step."""
         app = self.app
-        gens: Dict[int, Any] = {}
+        self.engine.begin_step()
         for w, worker in self.workers.items():
             role, rank = self.rmap.role_of(w)
             worker.gen = app.step(rank, worker.state, self.step_idx)
             worker.pending = None
             worker.done = False
-            worker.op_index = 0
-        # collective matching: key -> {rank: value}; per role group
-        contrib: Dict[Tuple, Dict[int, Any]] = {}
 
         # failure events that land inside this step fire between passes
         step_end = self.t + self.costs.step_time_s
@@ -406,15 +304,14 @@ class SimRuntime:
             for w, worker in alive:
                 if w not in self.workers or worker.done:
                     continue
-                role, rank = self.rmap.role_of(w)
                 # resolve pending op if satisfiable
-                send_val = _NOTHING
                 if worker.pending is None:
                     send_val = None      # first resume
                 else:
-                    send_val = self._try_resolve(worker, contrib)
-                    if send_val is _NOTHING:
+                    send_val = self._resolve(worker)
+                    if send_val is NOTHING:
                         continue
+                    worker.pending = None
                 # advance the generator
                 try:
                     op = worker.gen.send(send_val)
@@ -425,7 +322,7 @@ class SimRuntime:
                     worker.done = True
                     progressed = True
                     continue
-                worker.pending = self._intake(worker, op, contrib)
+                worker.pending = self._intake(worker, op)
                 if worker.pending is None:
                     progressed = True
             pass_i += 1
@@ -452,110 +349,18 @@ class SimRuntime:
         self.step_idx += 1
         self.result.steps_done = self.step_idx
 
-    def _intake(self, worker: _Worker, op: tuple, contrib) -> Optional[tuple]:
-        """Process a yielded op. Returns a pending descriptor if blocked."""
-        kind = op[0]
-        role, rank = self.rmap.role_of(worker.wid)
-        if kind == "send":
-            _, dst, tag, payload = op
-            self._route_send(worker, dst, tag, payload,
-                             log=(role == "cmp"))
-            return None
-        if kind == "exchange":
-            _, outmap, tag = op
-            for dst, payload in sorted(outmap.items()):
-                self._route_send(worker, dst, tag, payload,
-                                 log=(role == "cmp"))
-            return ("exchange_wait", sorted(outmap.keys()), tag, {})
-        if kind == "recv":
-            _, src, tag = op
-            return ("recv", src, tag)
-        if kind == "recv_any":
-            _, tag = op
-            return ("recv_any", tag)
-        if kind in ("allreduce", "barrier"):
-            idx = worker.op_index
-            worker.op_index += 1
-            if kind == "barrier":
-                key = ("barrier", self.step_idx, idx)
-                contrib.setdefault(key, {})[rank] = (role, True)
-                return ("collective", key, None)
-            _, value, redop = op
-            key = ("allreduce", self.step_idx, idx, redop)
-            contrib.setdefault(key, {})[(role, rank)] = copy.deepcopy(value)
-            return ("collective", key, redop)
-        raise ValueError(f"unknown op {kind!r}")
+    # -- op dispatch: route to the owning comm layer -------------------------
 
-    def _try_resolve(self, worker: _Worker, contrib):
-        """Attempt to complete worker.pending; returns _NOTHING if blocked."""
+    def _intake(self, worker: _Worker, op: tuple) -> Optional[tuple]:
+        if op[0] in P2P_OPS:
+            return self.transport.post(worker.ep, op, self.step_idx)
+        return self.engine.post(worker.ep, op, self.step_idx)
+
+    def _resolve(self, worker: _Worker):
         pend = worker.pending
-        kind = pend[0]
-        role, rank = self.rmap.role_of(worker.wid)
-        if kind == "recv":
-            _, src, tag = pend
-            m = self._match_recv(worker, src, tag)
-            if m is None:
-                return _NOTHING
-            worker.pending = None
-            return m.payload
-        if kind == "recv_any":
-            _, tag = pend
-            m = self._match_recv(worker, None, tag)
-            if m is None:
-                return _NOTHING
-            worker.pending = None
-            return (m.src, m.payload)
-        if kind == "exchange_wait":
-            _, srcs, tag, got = pend
-            for s in srcs:
-                if s not in got:
-                    m = self._match_recv(worker, s, tag)
-                    if m is not None:
-                        got[s] = m.payload
-            if len(got) < len(srcs):
-                return _NOTHING
-            worker.pending = None
-            return got
-        if kind == "collective":
-            _, key, redop = pend
-            votes = contrib.get(key, {})
-            if key[0] == "barrier":
-                have = {r for r in votes}
-                if have != set(range(self.n)):
-                    return _NOTHING
-                worker.pending = None
-                return None
-            # allreduce: cmp result from cmp contributions; rep result from
-            # rep contributions + no-rep cmp contributions (paper §5)
-            need = []
-            for r in range(self.n):
-                if role == "cmp" or self.rmap.rep[r] is None:
-                    need.append(("cmp", r))
-                else:
-                    need.append(("rep", r))
-            if any(k not in votes for k in need):
-                # promotion fallback: a promoted worker's old rep contribution
-                # counts as cmp (same value by construction)
-                missing = [k for k in need if k not in votes]
-                for mk in missing:
-                    alt = ("rep" if mk[0] == "cmp" else "cmp", mk[1])
-                    if alt not in votes:
-                        return _NOTHING
-                    votes[mk] = votes[alt]
-            vals = [votes[k] for k in need]
-            out = vals[0]
-            for v in vals[1:]:
-                if redop == "sum":
-                    out = out + v
-                elif redop == "max":
-                    out = np.maximum(out, v)
-                elif redop == "min":
-                    out = np.minimum(out, v)
-                else:
-                    raise ValueError(redop)
-            worker.pending = None
-            return out
-        raise ValueError(kind)
+        if self.transport.owns_pending(pend):
+            return self.transport.resolve(worker.ep, pend)
+        return self.engine.resolve(worker.ep, pend)
 
     # ------------------------------------------------------------------- run
 
@@ -579,14 +384,9 @@ class SimRuntime:
                 self._write_checkpoint()
         self.result.states = {
             r: self.workers[self.rmap.cmp[r]].state for r in range(self.n)}
+        self.result.replays = self.recovery.replays
+        self.result.duplicates_skipped = self.transport.duplicates_skipped
         self.result.wall_s = _time.perf_counter() - wall0
         if hasattr(self.app, "check"):
             self.result.check_value = self.app.check(self.result.states)
         return self.result
-
-
-class _Nothing:
-    __repr__ = lambda self: "<NOTHING>"
-
-
-_NOTHING = _Nothing()

@@ -1,0 +1,286 @@
+"""The repro.comm layer: every collective (allreduce/barrier/bcast/gather/
+reduce_scatter/alltoall) against a straight-line numpy reference, with and
+without replication, exactly-once delivery across mid-collective kills, and
+MPI_ANY_SOURCE wildcard forwarding (which repro.apps no longer exercises
+since PIC moved to alltoall)."""
+import numpy as np
+import pytest
+
+from repro.comm import ReferenceCollectives, combine, reference_result
+from repro.configs.base import FTConfig
+from repro.core.failure_sim import FailureEvent
+from repro.ft.workload import SimAppWorkload
+from repro.simrt import CostModel, SimRuntime
+
+SHAPES = [(), (5,), (3, 4)]
+
+
+def pay(rank: int, t: int, shape) -> np.ndarray:
+    """Deterministic per-(rank, step) payload."""
+    base = np.arange(int(np.prod(shape, dtype=int)) or 1,
+                     dtype=np.float64).reshape(shape) + 1.0
+    return base * (rank + 1) * (t + 3) * 0.25
+
+
+class CollectiveZoo:
+    """One step = one round of every collective; results fold into the
+    rank state so any protocol error shows up in the final comparison."""
+
+    def __init__(self, n_ranks: int, shape=(5,)):
+        self.n_ranks = n_ranks
+        self.shape = shape
+
+    def init_state(self, rank: int) -> dict:
+        return {k: np.zeros(self.shape)
+                for k in ("sum", "max", "bcast", "gather", "rs", "a2a")}
+
+    def step(self, rank, state, t):
+        n = self.n_ranks
+        root = t % n
+        v = pay(rank, t, self.shape)
+        # transport collectives first: their point-to-point messages are in
+        # flight at the pass boundary where failure events fire, so kills
+        # land mid-collective with real traffic to drain and replay
+        b = yield ("bcast", v + 7.0, root)
+        g = yield ("gather", v * 2.0, root)
+        rs = yield ("reduce_scatter", [v + d for d in range(n)], "sum")
+        a2a = yield ("alltoall", [v * (d + 1) for d in range(n)])
+        s = yield ("allreduce", v, "sum")
+        m = yield ("allreduce", v, "max")
+        yield ("barrier",)
+        g_fold = np.add.reduce(np.stack(g), axis=0) if g is not None else 0.0
+        a2a_fold = np.add.reduce(np.stack(a2a), axis=0)
+        return {"sum": state["sum"] + s, "max": state["max"] + m,
+                "bcast": state["bcast"] + b, "gather": state["gather"] + g_fold,
+                "rs": state["rs"] + rs, "a2a": state["a2a"] + a2a_fold}
+
+    def check(self, states) -> float:
+        return float(sum(float(np.sum(a)) for s in states.values()
+                         for a in s.values()))
+
+
+def zoo_reference(n: int, shape, steps: int):
+    """Straight-line numpy re-derivation of CollectiveZoo's final state."""
+    states = {r: {k: np.zeros(shape) for k in
+                  ("sum", "max", "bcast", "gather", "rs", "a2a")}
+              for r in range(n)}
+    for t in range(steps):
+        root = t % n
+        vs = {r: pay(r, t, shape) for r in range(n)}
+        ar_sum = np.sum(np.stack([vs[r] for r in range(n)]), axis=0)
+        ar_max = np.max(np.stack([vs[r] for r in range(n)]), axis=0)
+        for r in range(n):
+            states[r]["sum"] = states[r]["sum"] + ar_sum
+            states[r]["max"] = states[r]["max"] + ar_max
+            states[r]["bcast"] = states[r]["bcast"] + (vs[root] + 7.0)
+            if r == root:
+                states[r]["gather"] = states[r]["gather"] + np.sum(
+                    np.stack([vs[s] * 2.0 for s in range(n)]), axis=0)
+            states[r]["rs"] = states[r]["rs"] + np.sum(
+                np.stack([vs[s] + r for s in range(n)]), axis=0)
+            states[r]["a2a"] = states[r]["a2a"] + np.sum(
+                np.stack([vs[s] * (r + 1) for s in range(n)]), axis=0)
+    return states
+
+
+def run_zoo(mode, events=(), n=4, shape=(5,), steps=6, rep=1.0, tmpdir=None):
+    app = CollectiveZoo(n, shape)
+    ft = FTConfig(mode=mode, replication_degree=rep, mtbf_s=1e9,
+                  ckpt_interval_s=3.0)
+    rt = SimRuntime(app, ft, costs=CostModel(step_time_s=1.0, ckpt_cost_s=0.1,
+                                             restore_cost_s=0.1),
+                    ckpt_dir=tmpdir, failure_events=list(events),
+                    workers_per_node=2)
+    return rt.run(steps)
+
+
+def assert_states_equal(got, want):
+    for r in want:
+        for k in want[r]:
+            np.testing.assert_array_equal(got[r][k], want[r][k],
+                                          err_msg=f"rank {r} field {k}")
+
+
+# --------------------------------------------------- numpy-reference checks
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_collectives_match_reference_unreplicated(shape):
+    res = run_zoo("none", n=4, shape=shape)
+    assert_states_equal(res.states, zoo_reference(4, shape, 6))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_collectives_match_reference_replicated(shape):
+    """Full replication, failure-free: the transport-decomposed collectives
+    must survive the parallel cmp/rep routing unchanged."""
+    res = run_zoo("replication", n=4, shape=shape)
+    assert_states_equal(res.states, zoo_reference(4, shape, 6))
+
+
+@pytest.mark.parametrize("n", [2, 3, 5])
+def test_collectives_match_reference_world_sizes(n):
+    res = run_zoo("replication", n=n)
+    assert_states_equal(res.states, zoo_reference(n, (5,), 6))
+
+
+def test_sequential_resolver_matches_reference():
+    """SimAppWorkload's in-process resolver speaks the same collective
+    vocabulary (shared ReferenceCollectives semantics)."""
+    w = SimAppWorkload(CollectiveZoo(4, (5,)))
+    state = w.init_state()
+    for t in range(6):
+        state, _ = w.step(state, t)
+    assert_states_equal(state, zoo_reference(4, (5,), 6))
+
+
+# ----------------------------------------------- kills during a collective
+
+@pytest.mark.parametrize("shape", [(), (3, 4)])
+def test_kill_mid_collective_exact(shape):
+    """Kills landing between scheduler passes — i.e. in the middle of the
+    step's collective sequence — must not change any rank's answer:
+    promotion + drain + sender-log replay + send-ID dedup give
+    exactly-once delivery (paper §6.3)."""
+    clean = run_zoo("replication", n=4, shape=shape)
+    ev = [FailureEvent(1.5, (0,)), FailureEvent(3.5, (2,)),
+          FailureEvent(4.5, (5,))]
+    faulty = run_zoo("replication", ev, n=4, shape=shape)
+    assert faulty.promotions == 2 and faulty.restarts == 0
+    assert faulty.replays > 0              # in-flight messages were recovered
+    assert_states_equal(faulty.states, clean.states)
+    assert faulty.check_value == pytest.approx(clean.check_value, abs=0)
+
+
+def test_node_kill_mid_collective_exact(tmp_path):
+    """A whole-node kill (two workers at once) mid-collective."""
+    clean = run_zoo("replication", n=4)
+    faulty = run_zoo("replication", [FailureEvent(2.5, (0, 1))], n=4)
+    assert faulty.promotions == 2
+    assert_states_equal(faulty.states, clean.states)
+
+
+def test_pair_death_mid_collective_restarts_exact(tmp_path):
+    """Both copies of a rank die mid-collective: elastic restart from the
+    checkpoint, then the re-executed collectives reproduce the answer."""
+    clean = run_zoo("combined", tmpdir=str(tmp_path / "clean"))
+    ev = [FailureEvent(2.2, (1,)), FailureEvent(4.3, (5,))]
+    faulty = run_zoo("combined", ev, tmpdir=str(tmp_path / "faulty"))
+    assert faulty.restarts == 1 and faulty.promotions >= 1
+    assert_states_equal(faulty.states, clean.states)
+
+
+def test_partial_replication_mid_collective(tmp_path):
+    """Replication degree 0.5: intercomm fill-in and replica-side skip are
+    on the hot path of every transport collective; a promotion and an
+    unreplicated-rank restart both stay exact."""
+    clean = run_zoo("combined", rep=0.5, tmpdir=str(tmp_path / "clean"))
+    ev = [FailureEvent(1.5, (1,)), FailureEvent(3.5, (3,))]
+    faulty = run_zoo("combined", ev, rep=0.5, tmpdir=str(tmp_path / "faulty"))
+    assert faulty.promotions == 1 and faulty.restarts == 1
+    assert_states_equal(faulty.states, clean.states)
+
+
+# ------------------------------------------------------- wildcard receives
+
+class WildcardHub:
+    """Ranks 1..n-1 send to rank 0; rank 0 consumes them with MPI_ANY_SOURCE
+    receives (the cmp picks the order, the replica follows it) and bcasts a
+    commutative aggregate back."""
+
+    TAG = 9
+
+    def __init__(self, n_ranks: int):
+        self.n_ranks = n_ranks
+
+    def init_state(self, rank: int) -> dict:
+        return {"acc": np.zeros(4)}
+
+    def step(self, rank, state, t):
+        n = self.n_ranks
+        v = pay(rank, t, (4,))
+        if rank == 0:
+            total = np.zeros(4)
+            for _ in range(n - 1):
+                src, payload = yield ("recv_any", self.TAG)
+                total = total + payload * (src + 1)
+        else:
+            yield ("send", 0, self.TAG, v)
+            total = None
+        total = yield ("bcast", total, 0)
+        return {"acc": state["acc"] + total}
+
+    def check(self, states) -> float:
+        return float(sum(float(s["acc"].sum()) for s in states.values()))
+
+
+def test_wildcard_forwarding_with_promotion():
+    app_args = dict(n=4, steps=5)
+
+    def run(events=()):
+        app = WildcardHub(app_args["n"])
+        ft = FTConfig(mode="replication", replication_degree=1.0, mtbf_s=1e9)
+        rt = SimRuntime(app, ft, costs=CostModel(step_time_s=1.0),
+                        failure_events=list(events), workers_per_node=2)
+        return rt.run(app_args["steps"])
+
+    clean = run()
+    want = {r: np.zeros(4) for r in range(4)}
+    for t in range(5):
+        total = np.sum(np.stack([pay(s, t, (4,)) * (s + 1)
+                                 for s in range(1, 4)]), axis=0)
+        for r in range(4):
+            want[r] = want[r] + total
+    for r in range(4):
+        np.testing.assert_array_equal(clean.states[r]["acc"], want[r])
+
+    faulty = run([FailureEvent(1.5, (0,)), FailureEvent(3.5, (2,))])
+    assert faulty.promotions == 2
+    for r in range(4):
+        np.testing.assert_array_equal(faulty.states[r]["acc"],
+                                      clean.states[r]["acc"])
+
+
+# --------------------------------------------------------- unit-level bits
+
+def test_combine_matches_sequential_fold():
+    rng = np.random.default_rng(0)
+    for redop, fold in (("sum", np.add), ("max", np.maximum),
+                        ("min", np.minimum)):
+        for shape in SHAPES:
+            vals = [rng.standard_normal(shape) for _ in range(6)]
+            want = vals[0]
+            for v in vals[1:]:
+                want = fold(want, v) if redop != "sum" else want + v
+            np.testing.assert_array_equal(combine(redop, vals), want)
+    with pytest.raises(ValueError):
+        combine("prod", [1.0, 2.0])
+
+
+def test_reference_result_semantics():
+    n = 3
+    votes = {r: float(r + 1) for r in range(n)}
+    assert reference_result("allreduce", votes, 0, n, "sum") == 6.0
+    assert reference_result("bcast", votes, 2, n, 1) == 2.0
+    assert reference_result("gather", votes, 1, n, 1) == [1.0, 2.0, 3.0]
+    assert reference_result("gather", votes, 0, n, 1) is None
+    chunks = {r: [10 * r + d for d in range(n)] for r in range(n)}
+    assert reference_result("reduce_scatter", chunks, 1, n, "sum") == 33
+    assert reference_result("alltoall", chunks, 2, n) == [2, 12, 22]
+    assert reference_result("barrier", {}, 0, n) is None
+
+
+def test_reference_collectives_blocks_until_all_posted():
+    from repro.comm import NOTHING
+    coll = ReferenceCollectives(2)
+    p0 = coll.post(0, ("allreduce", 1.0, "sum"))
+    assert coll.resolve(0, p0) is NOTHING
+    p1 = coll.post(1, ("allreduce", 2.0, "sum"))
+    assert coll.resolve(0, p0) == 3.0 and coll.resolve(1, p1) == 3.0
+
+
+def test_unknown_collective_rejected():
+    app = CollectiveZoo(2)
+    rt = SimRuntime(app, FTConfig(mode="none"), costs=CostModel())
+    with pytest.raises(ValueError):
+        rt.engine.post(next(iter(rt.workers.values())).ep,
+                       ("allgatherv", 1.0), 0)
