@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint check bench bench-smoke
+.PHONY: test lint check bench bench-smoke bench-store
 
 test:
 	$(PY) -m pytest -x -q
@@ -23,4 +23,8 @@ bench:
 
 # the cheap failure-pipeline subset CI runs on every push
 bench-smoke:
-	$(PY) -m benchmarks.run --only fig13_log_replay --only fig9_time_distribution
+	$(PY) -m benchmarks.run --only fig13_log_replay --only fig9_time_distribution --only fig14_memstore
+
+# the disk-vs-memory checkpoint backend comparison (repro.store)
+bench-store:
+	$(PY) -m benchmarks.run --only fig14_memstore

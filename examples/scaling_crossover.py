@@ -24,3 +24,18 @@ for pt in ckpt_policy.scaling_study(base_procs=1024, base_mtbf_s=16000,
 cross = ckpt_policy.crossover_processes(1024, 16000, 46, 3 * 3600)
 print(f"\ncrossover at {cross} processes "
       f"(paper: 8192 cores at MTBF 2000 s).")
+
+# diskless combined mode (repro.store): pushing checkpoint shards to k
+# partner memories makes C network-bound and scale-free, so the combined
+# mode overtakes plain checkpoint/restart at a SMALLER process count
+c_mem = ckpt_policy.memstore_ckpt_cost(1.4e9)        # ~1.4 GB/proc state
+r_disk = 46 + 1000.0                                 # Lustre reload + relaunch
+r_mem = ckpt_policy.memstore_restore_cost(1.4e9)
+cross_disk = ckpt_policy.combined_crossover_processes(
+    1024, 16000, 46, restart_cost_s=r_disk, combined_restart_cost_s=r_disk)
+cross_mem = ckpt_policy.combined_crossover_processes(
+    1024, 16000, 46, combined_ckpt_cost_s=c_mem,
+    restart_cost_s=r_disk, combined_restart_cost_s=r_mem)
+print(f"combined-mode crossover vs plain C/R: disk C -> {cross_disk} procs, "
+      f"memstore C={c_mem:.2f}s -> {cross_mem} procs "
+      f"(see benchmarks/fig14_memstore.py)")

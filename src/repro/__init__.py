@@ -10,8 +10,13 @@ Layers:
   repro.comm        - the layered replica-aware communication subsystem:
                       transport (routing/logging/dedup), collectives
                       (CollectiveEngine: allreduce/barrier/bcast/gather/
-                      reduce_scatter/alltoall), recovery (drain + replay)
-                      (see docs/comm_api.md)
+                      allgather/reduce_scatter/alltoall/scan), recovery
+                      (drain + replay) (see docs/comm_api.md)
+  repro.store       - replicated in-memory checkpoint store over the comm
+                      transport: shift-by-k partner placement, banded
+                      shards, two-generation commit; CheckpointBackend
+                      (disk|memory) selected by FTConfig.ckpt_backend
+                      (see docs/store_api.md)
   repro.models      - all 10 assigned architectures
   repro.kernels     - Pallas TPU kernels (flash attention, rmsnorm, mamba scan)
   repro.distributed - sharding rules, replica-aware collectives

@@ -17,7 +17,10 @@ split every leaf on its axis-0 range (axis-0 is the batch/stack dim of every
 large tensor in this repo); leaves smaller than the band count are written
 whole by band 0. Writes are atomic (tmp + rename) and the LATEST pointer is
 updated last, so a failure mid-checkpoint never corrupts the previous one —
-the paper's coordinated-checkpoint safety at the file level.
+the paper's coordinated-checkpoint safety at the file level.  Every band
+file, the manifest and the enclosing directories are fsync'd BEFORE the
+rename publishes them, so the atomic-rename guarantee holds across a crash
+(a rename alone only orders metadata, not the file contents).
 """
 from __future__ import annotations
 
@@ -35,6 +38,22 @@ _NATIVE = {np.dtype(t) for t in
            ("bool", "int8", "uint8", "int16", "uint16", "int32", "uint32",
             "int64", "uint64", "float16", "float32", "float64",
             "complex64", "complex128")}
+
+
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by path (directory fsync publishes the
+    entries a rename created; not supported on some platforms — best
+    effort there)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def _to_storable(arr: np.ndarray) -> np.ndarray:
@@ -122,15 +141,25 @@ class Checkpointer:
         for i, band in enumerate(bands):
             np.savez(os.path.join(tmp, f"band_{i}.npz"),
                      **{k.replace("/", "|"): v for k, v in band.items()})
+            _fsync_path(os.path.join(tmp, f"band_{i}.npz"))
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        # durability before visibility: contents + tmp dir entries reach
+        # stable storage before the rename can publish the checkpoint
+        _fsync_path(tmp)
         shutil.rmtree(final, ignore_errors=True)
         os.rename(tmp, final)
+        _fsync_path(self.dir)
         if not baseline:
             with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
                 f.write(tag)
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(os.path.join(self.dir, "LATEST.tmp"),
                        os.path.join(self.dir, "LATEST"))
+            _fsync_path(self.dir)
         self.last_write_s = time.perf_counter() - t0
         return self.last_write_s
 

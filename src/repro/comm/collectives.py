@@ -30,8 +30,11 @@ Op vocabulary (generator yields):
     ("barrier",)                           -> None, all ranks
     ("bcast", value, root)                 -> root's value, all ranks
     ("gather", value, root)                -> [v_0..v_{n-1}] at root, None elsewhere
+    ("allgather", value)                   -> [v_0..v_{n-1}], all ranks
     ("reduce_scatter", chunks, redop)      -> combine of chunk[rank] across ranks
     ("alltoall", chunks)                   -> [chunk_from_0..chunk_from_{n-1}]
+    ("scan", value, redop)                 -> combine of v_0..v_rank (inclusive
+                                              prefix reduction)
 
 ``chunks`` is a length-n sequence indexed by destination rank.
 """
@@ -44,11 +47,14 @@ import numpy as np
 
 from repro.comm.transport import NOTHING, Endpoint, ReplicaTransport
 
-# reserved tag space for transport collectives (apps use tags >= 0)
+# reserved tag space for transport collectives (apps use tags >= 0;
+# repro.store uses -21..-24)
 TAG_BCAST = -11
 TAG_GATHER = -12
 TAG_REDUCE_SCATTER = -13
 TAG_ALLTOALL = -14
+TAG_ALLGATHER = -15
+TAG_SCAN = -16
 
 _REDOPS = {"sum": np.add, "max": np.maximum, "min": np.minimum}
 
@@ -88,10 +94,14 @@ def reference_result(kind: str, votes: Dict[int, Any], rank: int, n: int,
     if kind == "gather":
         return [copy.deepcopy(votes[r]) for r in range(n)] \
             if rank == meta else None
+    if kind == "allgather":
+        return [copy.deepcopy(votes[r]) for r in range(n)]
     if kind == "reduce_scatter":
         return combine(meta, [votes[s][rank] for s in range(n)])
     if kind == "alltoall":
         return [copy.deepcopy(votes[s][rank]) for s in range(n)]
+    if kind == "scan":
+        return combine(meta, [votes[s] for s in range(rank + 1)])
     raise ValueError(f"unknown collective {kind!r}")
 
 
@@ -293,9 +303,64 @@ class AlltoallOp(_ScatterWaitAllOp):
         return parts
 
 
+class AllgatherOp(_TransportOp):
+    """Every rank contributes one value; every rank receives the full
+    [v_0..v_{n-1}] list (gather without a root): a dense exchange of the
+    same payload to every peer."""
+
+    kind = "allgather"
+    tag = TAG_ALLGATHER
+
+    def post(self, engine, ep, role, rank, op, step):
+        _, value = op
+        for dst in range(engine.n):
+            if dst != rank:
+                self._send(engine, ep, role, dst, value, step)
+        return ("allgather_wait", None, {rank: copy.deepcopy(value)})
+
+    def resolve(self, engine, ep, role, rank, pend):
+        _, _meta, got = pend
+        for s in range(engine.n):
+            if s not in got:
+                m = engine.transport.match_recv(ep, s, self.tag)
+                if m is not None:
+                    got[s] = m.payload
+        if len(got) < engine.n:
+            return NOTHING
+        return [got[s] for s in range(engine.n)]
+
+
+class ScanOp(_TransportOp):
+    """Inclusive prefix reduction (MPI_Scan): rank r's result combines the
+    contributions of ranks 0..r in rank order.  Each rank sends its value
+    only to the ranks above it and waits only for the ranks below it, so
+    rank 0 never blocks."""
+
+    kind = "scan"
+    tag = TAG_SCAN
+
+    def post(self, engine, ep, role, rank, op, step):
+        _, value, redop = op
+        for dst in range(rank + 1, engine.n):
+            self._send(engine, ep, role, dst, value, step)
+        return ("scan_wait", redop, {rank: copy.deepcopy(value)})
+
+    def resolve(self, engine, ep, role, rank, pend):
+        _, redop, got = pend
+        for s in range(rank):
+            if s not in got:
+                m = engine.transport.match_recv(ep, s, self.tag)
+                if m is not None:
+                    got[s] = m.payload
+        if len(got) < rank + 1:
+            return NOTHING
+        return combine(redop, [got[s] for s in range(rank + 1)])
+
+
 COLLECTIVE_OPS: Dict[str, CollectiveOp] = {
     op.kind: op for op in (AllreduceOp(), BarrierOp(), BcastOp(),
-                           GatherOp(), ReduceScatterOp(), AlltoallOp())
+                           GatherOp(), ReduceScatterOp(), AlltoallOp(),
+                           AllgatherOp(), ScanOp())
 }
 
 # pending-descriptor head -> handler; switchboard ops share the
@@ -400,13 +465,13 @@ class ReferenceCollectives:
         self.op_index[rank] = idx + 1
         if kind == "barrier":
             key, value, meta = (kind, idx), True, None
-        elif kind in ("allreduce", "reduce_scatter"):
+        elif kind in ("allreduce", "reduce_scatter", "scan"):
             _, value, redop = op
             key, meta = (kind, idx, redop), redop
         elif kind in ("bcast", "gather"):
             _, value, root = op
             key, meta = (kind, idx, root), root
-        elif kind == "alltoall":
+        elif kind in ("allgather", "alltoall"):
             key, value, meta = (kind, idx), op[1], None
         else:
             raise ValueError(f"unknown collective {kind!r}")

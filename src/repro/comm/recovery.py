@@ -24,9 +24,21 @@ from repro.comm.transport import Endpoint, ReplicaTransport
 
 
 class RecoveryManager:
-    def __init__(self, transport: ReplicaTransport):
+    """``store`` optionally attaches a repro.store.MemStore: worker deaths
+    reported through ``note_dead`` then also kill that worker's in-memory
+    shard copies (partner memory dies with its host process)."""
+
+    def __init__(self, transport: ReplicaTransport, store=None):
         self.transport = transport
+        self.store = store
         self.replays = 0
+
+    def note_dead(self, workers) -> None:
+        """Record worker deaths with the attached store (no-op without
+        one); the transport's endpoints are dropped by the scheduler."""
+        if self.store is not None:
+            for w in workers:
+                self.store.lose_worker(w)
 
     def drain_current_step(self, ep: Endpoint, step: int) -> None:
         """Drop in-flight messages of the current step (network loss during

@@ -187,6 +187,14 @@ class FTConfig:
     mtbf_s: float = 2000.0               # per-job MTBF for the failure model
     ckpt_cost_s: float = 0.0             # measured C; 0 -> measure online
     ckpt_interval_s: float = 0.0         # 0 -> Young-Daly sqrt(2*mu*C)
+    # checkpoint durability backend (repro.store.make_backend):
+    #   disk   - checkpoint/io.py Checkpointer (falls back to the memory
+    #            store when there is no ckpt_dir / non-disk workload)
+    #   memory - replicated in-memory store: shards pushed to store_partners
+    #            partner memories in store_bands messages (network-bound C)
+    ckpt_backend: str = "disk"
+    store_partners: int = 2
+    store_bands: int = 4
     weibull_shape: float = 0.7           # paper: matches real failure traces
     message_log_limit_bytes: int = 1 << 28
     max_failures: int = 0                # 0 -> unbounded

@@ -8,6 +8,11 @@ Implements:
     (Ferreira et al. [10], reproduced analytically + by simulation)
   * the crossover finder: smallest process count where replication beats
     checkpointing (the paper's 8192-core result)
+  * the diskless (repro.store) cost model: network-bound C for checkpoints
+    pushed to partner memory instead of the parallel filesystem, combined-
+    mode efficiency (replication + checkpoints against pair deaths at the
+    MTTI rate), and the combined-vs-checkpoint crossover — which moves to
+    a smaller process count when C is the memory store's.
 """
 from __future__ import annotations
 
@@ -83,6 +88,97 @@ def replication_efficiency(job_mtbf_s: float, n_procs: int,
     pair_waste = min(pair_waste, 1.0)
     eff = 0.5 * (1.0 - repair_waste) * (1.0 - pair_waste)
     return max(0.0, eff)
+
+
+# -- diskless checkpointing (repro.store) ------------------------------------
+
+# 100 Gb/s NIC per node, the ReStore-style partner-push regime
+DEFAULT_NET_BW_BPS = 12.5e9
+DEFAULT_NET_LATENCY_S = 100e-6
+
+
+def memstore_ckpt_cost(state_bytes: float, *, n_partners: int = 2,
+                       net_bw_Bps: float = DEFAULT_NET_BW_BPS,
+                       net_latency_s: float = DEFAULT_NET_LATENCY_S,
+                       n_messages: int = 8) -> float:
+    """Network-bound checkpoint cost C of the in-memory store.
+
+    Each process pushes its ``state_bytes`` to ``n_partners`` partner
+    memories (banded into ``n_messages`` point-to-point messages each);
+    pushes across processes overlap, so per-process C is the serialized
+    partner copies over the NIC plus message latencies.  Unlike disk C it
+    does NOT grow with the aggregate job size — that is what moves the
+    combined-mode crossover to smaller process counts.
+    """
+    if state_bytes < 0 or n_partners < 1 or net_bw_Bps <= 0:
+        raise ValueError("need state_bytes >= 0, n_partners >= 1, bw > 0")
+    return (n_partners * state_bytes / net_bw_Bps
+            + n_partners * n_messages * net_latency_s)
+
+
+def memstore_restore_cost(state_bytes: float, *,
+                          net_bw_Bps: float = DEFAULT_NET_BW_BPS,
+                          relaunch_s: float = 60.0) -> float:
+    """Pull the shards back from one surviving partner + job relaunch.
+    No parallel-filesystem reload: the dominant term is the relaunch."""
+    if state_bytes < 0 or net_bw_Bps <= 0:
+        raise ValueError("need state_bytes >= 0 and bw > 0")
+    return state_bytes / net_bw_Bps + relaunch_s
+
+
+def combined_efficiency(job_mtbf_s: float, n_procs: int, ckpt_cost_s: float,
+                        restart_cost_s: float, *,
+                        repair_cost_s: float = 1.0,
+                        interval_s: float = 0.0) -> float:
+    """Useful fraction for the COMBINED mode on n_procs cores.
+
+    Redundancy halves throughput (0.5).  Single-process failures cost only
+    the O(1) promotion repair; pair deaths arrive at the replication MTTI
+    and are absorbed by checkpoint/restart with the Young-Daly interval
+    tuned to that MTTI — so the combined mode's waste is governed by ITS
+    backend's C (disk, or the memory store's network-bound C).
+    """
+    proc_mtbf = job_mtbf_s * n_procs
+    mtti = replication_mtti(proc_mtbf, max(n_procs // 2, 1))
+    repair_waste = min(repair_cost_s / job_mtbf_s, 1.0)
+    eff = ckpt_efficiency(mtti, ckpt_cost_s, restart_cost_s,
+                          interval_s=interval_s)
+    return max(0.0, 0.5 * (1.0 - repair_waste) * eff)
+
+
+def combined_crossover_processes(base_procs: int, base_mtbf_s: float,
+                                 base_ckpt_cost_s: float, *,
+                                 combined_ckpt_cost_s: float = None,
+                                 restart_cost_s: float = 60.0,
+                                 combined_restart_cost_s: float = None,
+                                 repair_cost_s: float = 1.0,
+                                 max_doublings: int = 12,
+                                 steps_per_doubling: int = 8,
+                                 ckpt_growth: float = 1.6) -> int:
+    """Smallest process count where COMBINED-mode efficiency exceeds plain
+    checkpoint/restart.
+
+    The checkpoint baseline always pays the disk C (growing ``ckpt_growth``
+    per doubling, per the paper's Table 1); the combined mode pays its own
+    backend's C: pass ``combined_ckpt_cost_s`` = the memory store's
+    network-bound C (scale-free) for the diskless variant, or leave None to
+    share the disk C.  The scan is finer than doublings so nearby
+    crossovers of the two backends resolve to different counts.
+    """
+    for i in range(max_doublings * steps_per_doubling + 1):
+        factor = 2.0 ** (i / steps_per_doubling)
+        p = int(round(base_procs * factor))
+        mu = base_mtbf_s / factor
+        c_disk = base_ckpt_cost_s * ckpt_growth ** math.log2(factor)
+        c_cmb = combined_ckpt_cost_s if combined_ckpt_cost_s is not None \
+            else c_disk
+        r_cmb = combined_restart_cost_s if combined_restart_cost_s \
+            is not None else restart_cost_s
+        if combined_efficiency(mu, p, c_cmb, r_cmb,
+                               repair_cost_s=repair_cost_s) > \
+                ckpt_efficiency(mu, c_disk, restart_cost_s):
+            return p
+    return -1
 
 
 @dataclass

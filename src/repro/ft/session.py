@@ -107,12 +107,9 @@ class FTSession:
         rep = RunReport()
         wall0 = time.perf_counter()
         self._init_fabric()                       # re-entrant sessions
-        if self.ckpt_dir and self.strategy.wants_checkpoint and \
-                getattr(workload, "disk_checkpointable", True):
-            from repro.checkpoint import Checkpointer
-            self.ckpt = Checkpointer(self.ckpt_dir)
-        else:
-            self.ckpt = None
+        # the strategy's on_start builds its CheckpointBackend
+        # (repro.store.make_backend) and re-points the self.ckpt alias
+        self.ckpt = None
 
         state = workload.init_state()
         strat = self.strategy
@@ -134,10 +131,13 @@ class FTSession:
                 rep.failures += len(fresh)
                 self.rmap, plan = plan_recovery(
                     self.rmap, fresh,
-                    last_ckpt_step=strat.last_ckpt_step, current_step=step)
+                    last_ckpt_step=strat.last_ckpt_step, current_step=step,
+                    store=strat.recovery_store())
                 rep.events.append(StepEvent(step, plan.kind,
                                             {"failed": list(fresh),
-                                             "promotions": plan.promotions}))
+                                             "promotions": plan.promotions,
+                                             "restore_backend":
+                                                 plan.restore_backend}))
                 state, step = strat.handle_plan(workload, state, plan,
                                                 step, rep)
 

@@ -5,9 +5,11 @@ ReplicatedServer:
 
   NoFT                 native step loop (the "EMPI direct" baseline)
   CheckpointStrategy   coordinated checkpoint/restart at the Young-Daly
-                       interval (disk when the session has a ckpt_dir and
-                       the workload is disk-checkpointable, else in-memory
-                       snapshots — the ReStore-style replicated-state idea)
+                       interval through a CheckpointBackend (repro.store):
+                       DiskBackend over checkpoint/io.py when the session
+                       has a ckpt_dir and the workload is disk-
+                       checkpointable, else MemBackend — shards replicated
+                       into partner memory (the ReStore idea)
   ReplicationStrategy  a replica redundantly executes every step; on
                        computational failure the replica is promoted in O(1)
                        (state already current — no restore, no rollback)
@@ -24,18 +26,24 @@ from typing import Any, Optional, Tuple
 
 from repro.configs.base import FTConfig
 from repro.core import ckpt_policy
-from repro.ft.workload import copy_tree, restore_state, snapshot_state
+from repro.ft.workload import copy_tree
 
 
 class FTStrategy:
     mode = "none"
     wants_replica = False
     wants_checkpoint = False
+    backend = None                       # CheckpointBackend (repro.store)
 
     def __init__(self, ft: Optional[FTConfig] = None):
         self.ft = ft or FTConfig(mode=self.mode)
         self.session = None
         self.last_ckpt_step = 0
+
+    def recovery_store(self):
+        """The in-memory store backing this strategy's checkpoints, if any
+        (consulted by plan_recovery for restore-cost planning)."""
+        return None
 
     def bind(self, session) -> "FTStrategy":
         self.session = session
@@ -124,22 +132,37 @@ class _ReplicaMixin:
 
 class _CheckpointMixin:
     """Coordinated checkpoint/restart on the primary coordinator's
-    Young-Daly timer; disk via Checkpointer or in-memory snapshots."""
+    Young-Daly timer, through whichever CheckpointBackend the FTConfig
+    selects (repro.store.make_backend): DiskBackend over checkpoint/io.py,
+    or MemBackend over the replicated in-memory store — the strategy is
+    backend-agnostic."""
 
     wants_checkpoint = True
+    backend = None
 
     def on_start(self, workload, state, rep) -> None:
         super().on_start(workload, state, rep)
         self._interval_set = False
-        self._mem_ckpt = None
-        if self.session.ckpt is not None:
-            self.session.ckpt.save(0, state, baseline=True,
-                                   extra={"mode": self.ft.mode})
+        from repro.store import make_backend
+        self.backend = make_backend(self.ft, self.session, workload)
+        # legacy alias: tests/shims peek at session.ckpt for the disk path
+        self.session.ckpt = getattr(self.backend, "ckpt", None)
+        self.backend.save(0, state, workload=workload, baseline=True,
+                          extra={"mode": self.ft.mode})
+
+    def recovery_store(self):
+        return getattr(self.backend, "store", None)
+
+    def handle_plan(self, workload, state, plan, step, rep):
+        if self.backend is not None:
+            # the dead workers' shard memory dies with them
+            self.backend.on_failure(plan.failed_workers)
+        return super().handle_plan(workload, state, plan, step, rep)
 
     def maybe_checkpoint(self, workload, state, step, vtime, rep) -> None:
         sess = self.session
         if not self._interval_set:
-            measured = (sess.ckpt.last_write_s if sess.ckpt else 0.0) or 0.05
+            measured = self.backend.last_write_s or 0.05
             c = self.ft.ckpt_cost_s or max(measured, 1e-6)
             interval = self.ft.ckpt_interval_s or \
                 ckpt_policy.young_daly_interval(self.ft.mtbf_s, c)
@@ -147,24 +170,22 @@ class _CheckpointMixin:
             self._interval_set = True
         if sess.coords.due_checkpoint(vtime):
             t0 = time.perf_counter()
-            if sess.ckpt is not None:
-                sess.ckpt.save(step, state)
-            else:
-                self._mem_ckpt = (step, snapshot_state(workload, state))
+            self.backend.save(step, state, workload=workload)
             rep.ckpt_s += time.perf_counter() - t0
             rep.ckpt_writes += 1
             self.last_ckpt_step = step
             sess.coords.restart_timer(vtime)
 
     def _restore(self, workload, state, rep):
-        sess = self.session
+        from repro.store import StoreUnrecoverable
+        if self.backend is None or not self.backend.has_checkpoint():
+            return super()._restore(workload, state, rep)
         t0 = time.perf_counter()
-        if sess.ckpt is not None and sess.ckpt.latest_tag():
-            state, ck_step, _ = sess.ckpt.restore(state)
-        elif self._mem_ckpt is not None:
-            ck_step, snap = self._mem_ckpt
-            state = restore_state(workload, snap)
-        else:
+        try:
+            state, ck_step = self.backend.restore(state, workload=workload)
+        except StoreUnrecoverable:
+            # more failure domains lost than the placement tolerates:
+            # restart from scratch like the no-checkpoint baseline
             return super()._restore(workload, state, rep)
         rep.restore_s += time.perf_counter() - t0
         return state, ck_step

@@ -77,6 +77,8 @@ class RunResult:
     restarts: int = 0
     replays: int = 0
     duplicates_skipped: int = 0
+    store_restores: int = 0         # elastic restores served by repro.store
+    store_fallbacks: int = 0        # store unrecoverable -> harness snapshot
     wall_s: float = 0.0
     check_value: Optional[float] = None
 
@@ -89,13 +91,20 @@ class RunResult:
 @dataclass
 class CostModel:
     """Virtual-time costs. Defaults are per-step scale-free units; the
-    benchmarks set them from the paper's Table 1 measurements."""
+    benchmarks set them from the paper's Table 1 measurements.
+
+    ``mem_ckpt_cost_s`` / ``mem_restore_cost_s`` are the network-bound C
+    and R of the in-memory store (FTConfig.ckpt_backend == "memory");
+    benchmarks derive them from ckpt_policy.memstore_ckpt_cost.  None
+    falls back to the disk values."""
 
     step_time_s: float = 1.0
     ckpt_cost_s: float = 0.05
     restore_cost_s: float = 0.05
     repair_cost_s: float = 0.005        # shrink + replay (paper: negligible)
     log_removal_cost_s: float = 0.001
+    mem_ckpt_cost_s: Optional[float] = None
+    mem_restore_cost_s: Optional[float] = None
 
 
 class _Worker:
@@ -132,8 +141,14 @@ class SimRuntime:
         self.respawn = respawn_on_restart
         self.drop_inflight = drop_inflight_on_failure
 
+        backend = getattr(ft, "ckpt_backend", "disk")
+        if backend not in ("disk", "memory"):
+            raise ValueError(f"unknown ckpt_backend {backend!r}; "
+                             f"expected 'disk' or 'memory'")
+        self.use_memstore = ft.mode in ("checkpoint", "combined") and \
+            backend == "memory"
         interval = ft.ckpt_interval_s or ckpt_policy.young_daly_interval(
-            max(ft.mtbf_s, 1e-9), self.costs.ckpt_cost_s) \
+            max(ft.mtbf_s, 1e-9), self._ckpt_c()) \
             if ft.mode in ("checkpoint", "combined") else float("inf")
         self.coords = CoordinatorSet(self.topology, interval)
 
@@ -150,7 +165,15 @@ class SimRuntime:
         self.transport = ReplicaTransport(self.rmap, self.n,
                                           ft.message_log_limit_bytes)
         self.engine = CollectiveEngine(self.transport)
-        self.recovery = RecoveryManager(self.transport)
+        # diskless checkpointing (repro.store): rank snapshots replicated
+        # into partner memory over the same transport
+        self.store = None
+        if self.use_memstore:
+            from repro.store import MemStore
+            self.store = MemStore(self.transport, self.topology,
+                                  k_partners=ft.store_partners,
+                                  n_bands=ft.store_bands)
+        self.recovery = RecoveryManager(self.transport, store=self.store)
 
         self.workers: Dict[int, _Worker] = {}
         for w in self.rmap.alive():
@@ -169,6 +192,18 @@ class SimRuntime:
         self._write_checkpoint(baseline=True)
 
     # ------------------------------------------------------------------ ckpt
+
+    def _ckpt_c(self) -> float:
+        """Effective checkpoint cost C: the memory backend's network-bound
+        cost when configured, else the disk cost."""
+        if self.use_memstore and self.costs.mem_ckpt_cost_s is not None:
+            return self.costs.mem_ckpt_cost_s
+        return self.costs.ckpt_cost_s
+
+    def _restore_c(self) -> float:
+        if self.use_memstore and self.costs.mem_restore_cost_s is not None:
+            return self.costs.mem_restore_cost_s
+        return self.costs.restore_cost_s
 
     def _ckpt_path(self, rank: int, baseline: bool = False) -> str:
         kind = "baseline" if baseline else "latest"
@@ -190,7 +225,12 @@ class SimRuntime:
         snap = self._snapshot()
         self._ckpt_mem = snap
         self.last_ckpt_step = self.step_idx
-        if self.ckpt_dir:
+        if self.store is not None:
+            # diskless: rank snapshots pushed to partner memory over the
+            # transport (two-generation commit; previous gen retained on
+            # any mid-commit failure)
+            self.store.save(snap["step"], snap["ranks"])
+        elif self.ckpt_dir:
             for r, data in snap["ranks"].items():
                 with open(self._ckpt_path(r, baseline), "wb") as f:
                     pickle.dump({"step": snap["step"], **data}, f)
@@ -198,8 +238,8 @@ class SimRuntime:
                 with open(os.path.join(self.ckpt_dir, "LATEST"), "w") as f:
                     f.write(str(snap["step"]))
         if not baseline:
-            self.result.time.ckpt_write += self.costs.ckpt_cost_s
-            self.t += self.costs.ckpt_cost_s
+            self.result.time.ckpt_write += self._ckpt_c()
+            self.t += self._ckpt_c()
             # checkpoint boundary: trim message logs (log removal component)
             for log in self.transport.send_logs.values():
                 log.trim_before_step(self.step_idx)
@@ -212,7 +252,7 @@ class SimRuntime:
         checkpoint. With respawn, failed slots are refilled (same N+M);
         otherwise the replication degree shrinks to the surviving workers."""
         snap = self._ckpt_mem
-        if self.ckpt_dir and os.path.exists(
+        if self.store is None and self.ckpt_dir and os.path.exists(
                 os.path.join(self.ckpt_dir, "LATEST")):
             ranks = {}
             for r in range(self.n):
@@ -229,17 +269,34 @@ class SimRuntime:
         self.engine.world_changed()
         self.workers = {}
         for w in self.rmap.alive():
-            role, rank = self.rmap.role_of(w)
+            self.workers[w] = _Worker(w, None, self.transport.register(w))
+
+        restore_c = self._restore_c()
+        if self.store is not None:
+            # pull the durable generation's shards back from surviving
+            # partner memory through the rebuilt world's endpoints
+            from repro.store import StoreUnrecoverable
+            self.store.rebind(topology=self.topology)
+            try:
+                ranks, step = self.store.restore()
+                snap = {"step": step, "ranks": ranks}
+                self.result.store_restores += 1
+            except StoreUnrecoverable:
+                # beyond the placement's tolerance: fall back to the
+                # harness's coordinated snapshot (counted, not hidden)
+                self.result.store_fallbacks += 1
+                restore_c = self.costs.restore_cost_s
+
+        for w, nw in self.workers.items():
+            _role, rank = self.rmap.role_of(w)
             data = snap["ranks"][rank]
-            nw = _Worker(w, copy.deepcopy(data["state"]),
-                         self.transport.register(w))
+            nw.state = copy.deepcopy(data["state"])
             self.transport.load_rank(rank, nw.ep, data)
-            self.workers[w] = nw
 
         self.step_idx = snap["step"]
         self.result.restarts += 1
-        self.result.time.restore += self.costs.restore_cost_s
-        self.t += self.costs.restore_cost_s
+        self.result.time.restore += restore_c
+        self.t += restore_c
 
     # --------------------------------------------------------------- failure
 
@@ -260,10 +317,12 @@ class SimRuntime:
             for w in victims:
                 self.workers.pop(w, None)
                 self.transport.drop(w)
+            self.recovery.note_dead(victims)
             raise
         for w in victims:
             self.workers.pop(w, None)
             self.transport.drop(w)
+        self.recovery.note_dead(victims)
         self.engine.world_changed()
         promoted = [e for e in events if e["kind"] == "promote"]
         self.result.promotions += len(promoted)

@@ -1,0 +1,38 @@
+"""repro.store — a replicated in-memory checkpoint store (diskless C/R).
+
+The paper's combined mode pays for pair-death resilience with *disk*
+checkpoints whose cost C drives the Young-Daly interval; ReStore-style
+diskless checkpointing keeps redundant copies of the recovery data in
+*partner process memory* instead, making C network-bound and orders of
+magnitude cheaper.  This package builds that on top of the repro.comm
+transport:
+
+  placement  - shift-by-k partner-group placement: a rank's shards never
+               share a failure domain (node, replica pair) with their
+               owner, so any f <= k failures leave every band recoverable;
+  memstore   - banded shards of the workload state pushed to k partners as
+               point-to-point messages over ReplicaTransport, double-
+               buffered with a two-generation commit protocol mirroring
+               checkpoint/io.py's tmp+rename guarantee: a generation is
+               durable only once all partners ack, and the previous
+               generation is retained until then;
+  recovery   - rebuild a dead worker's state by pulling surviving partner
+               shards back over the transport;
+  backend    - the CheckpointBackend protocol unifying this store with the
+               on-disk Checkpointer (DiskBackend / MemBackend), selected by
+               FTConfig.ckpt_backend.
+
+See docs/store_api.md for the contracts.
+"""
+from repro.store.backend import (CheckpointBackend, DiskBackend, MemBackend,
+                                 make_backend)
+from repro.store.memstore import MemStore
+from repro.store.placement import PartnerPlacement, PlacementError
+from repro.store.recovery import StoreRecovery, StoreUnrecoverable
+
+__all__ = [
+    "PartnerPlacement", "PlacementError",
+    "MemStore",
+    "StoreRecovery", "StoreUnrecoverable",
+    "CheckpointBackend", "DiskBackend", "MemBackend", "make_backend",
+]

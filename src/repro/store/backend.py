@@ -1,0 +1,168 @@
+"""CheckpointBackend: one protocol over disk and in-memory checkpoints.
+
+``CheckpointStrategy``/``CombinedStrategy`` (repro.ft.strategy) are
+backend-agnostic: they snapshot/restore through whichever backend
+``make_backend`` selects from the FTConfig —
+
+  DiskBackend  wraps checkpoint/io.py's Checkpointer (banded npz files,
+               fsync'd tmp + rename, elastic restore);
+  MemBackend   wraps repro.store.MemStore: the session state is pickled,
+               split into one byte shard per logical rank, and each
+               rank's shard is pushed to its k placement partners over a
+               ReplicaTransport mirroring the session's fabric.  C becomes
+               network-bound (ckpt_policy.memstore_ckpt_cost feeds the
+               Young-Daly interval) and restores pull surviving partner
+               shards instead of reading a filesystem.
+
+Selection (make_backend): ``FTConfig.ckpt_backend == "memory"`` forces the
+store; ``"disk"`` uses the Checkpointer when the session has a ckpt_dir
+and the workload is disk-checkpointable, and falls back to the store
+otherwise (checkpoint mode without a ckpt_dir checkpoints in replicated
+memory — the ReStore behaviour docs/ft_api.md promises).
+"""
+from __future__ import annotations
+
+import pickle
+from typing import Any, Optional, Protocol, Tuple, runtime_checkable
+
+from repro.comm import ReplicaTransport
+from repro.core import ckpt_policy
+from repro.store.memstore import MemStore
+from repro.store.recovery import StoreUnrecoverable
+
+
+@runtime_checkable
+class CheckpointBackend(Protocol):
+    """What a checkpoint strategy needs from a durability layer."""
+
+    kind: str
+    last_write_s: float
+
+    def save(self, step: int, state: Any, *, workload=None,
+             baseline: bool = False, extra: Optional[dict] = None) -> float:
+        ...
+
+    def restore(self, like: Any, *, workload=None) -> Tuple[Any, int]:
+        ...
+
+    def has_checkpoint(self) -> bool:
+        ...
+
+    def on_failure(self, workers) -> None:
+        ...
+
+
+class DiskBackend:
+    """The existing on-disk Checkpointer behind the backend protocol."""
+
+    kind = "disk"
+
+    def __init__(self, ckpt_dir: str, n_bands: int = 4):
+        from repro.checkpoint import Checkpointer   # pulls in jax
+        self.ckpt = Checkpointer(ckpt_dir, n_bands)
+
+    @property
+    def last_write_s(self) -> float:
+        return self.ckpt.last_write_s
+
+    def save(self, step, state, *, workload=None, baseline=False,
+             extra=None) -> float:
+        return self.ckpt.save(step, state, baseline=baseline, extra=extra)
+
+    def restore(self, like, *, workload=None):
+        state, step, _extra = self.ckpt.restore(like)
+        return state, step
+
+    def has_checkpoint(self) -> bool:
+        return self.ckpt.latest_tag() is not None
+
+    def on_failure(self, workers) -> None:
+        pass                                     # disks do not die with workers
+
+
+class MemBackend:
+    """Replicated in-memory checkpoints for an FTSession.
+
+    The session's single SPMD-collapsed state pytree is snapshotted
+    (workload ``snapshot`` hook or deep copy), pickled, and split into one
+    byte shard per logical rank; rank r owns shard r and pushes it to its
+    placement partners.  Worker deaths reported by the session kill the
+    matching store memory, and an elastic restart rebinds the store to the
+    session's rebuilt fabric before pulling the shards back.
+    """
+
+    kind = "memory"
+
+    def __init__(self, session, *, k_partners: int = 2, n_bands: int = 4,
+                 net_bw_Bps: float = ckpt_policy.DEFAULT_NET_BW_BPS):
+        self.session = session
+        self.net_bw_Bps = net_bw_Bps
+        self.last_write_s = 0.0
+        self.k_partners = k_partners
+        self.n_bands = n_bands
+        self.store = self._build(session.rmap, session.topology)
+
+    def _build(self, rmap, topology) -> MemStore:
+        transport = ReplicaTransport(rmap, rmap.n)
+        for w in rmap.alive():
+            transport.register(w)
+        return MemStore(transport, topology, k_partners=self.k_partners,
+                        n_bands=self.n_bands)
+
+    # -- protocol ------------------------------------------------------------
+
+    def save(self, step, state, *, workload=None, baseline=False,
+             extra=None) -> float:
+        from repro.ft.workload import snapshot_state
+        snap = snapshot_state(workload, state) if workload is not None \
+            else state
+        blob = pickle.dumps(snap, protocol=pickle.HIGHEST_PROTOCOL)
+        n = self.store.transport.rmap.n
+        chunks = MemStore._chunk(blob, n)
+        self.store.save(step, {r: chunks[r] for r in range(n)})
+        # the modeled (network-bound) C per process feeds Young-Daly
+        self.last_write_s = ckpt_policy.memstore_ckpt_cost(
+            len(blob) / n, n_partners=self.k_partners,
+            net_bw_Bps=self.net_bw_Bps, n_messages=self.n_bands)
+        return self.last_write_s
+
+    def restore(self, like, *, workload=None):
+        from repro.ft.workload import restore_state
+        sess = self.session
+        # the session swapped in the restarted fabric before calling us:
+        # rebuild the store world on it (shard memory carries over)
+        transport = ReplicaTransport(sess.rmap, sess.rmap.n)
+        for w in sess.rmap.alive():
+            transport.register(w)
+        self.store.rebind(topology=sess.topology, transport=transport)
+        states, step = self.store.restore()      # raises StoreUnrecoverable
+        blob = b"".join(states[r].tobytes() for r in sorted(states))
+        snap = pickle.loads(blob)
+        state = restore_state(workload, snap) if workload is not None \
+            else snap
+        return state, step
+
+    def has_checkpoint(self) -> bool:
+        return self.store.durable() is not None
+
+    def on_failure(self, workers) -> None:
+        for w in workers:
+            self.store.lose_worker(w)
+
+
+def make_backend(ft, session, workload) -> CheckpointBackend:
+    """Map FTConfig.ckpt_backend onto a backend for this session/workload."""
+    choice = getattr(ft, "ckpt_backend", "disk")
+    if choice not in ("disk", "memory"):
+        raise ValueError(f"unknown ckpt_backend {choice!r}; "
+                         f"expected 'disk' or 'memory'")
+    disk_ok = session.ckpt_dir and getattr(workload, "disk_checkpointable",
+                                           True)
+    if choice == "disk" and disk_ok:
+        return DiskBackend(session.ckpt_dir)
+    return MemBackend(session, k_partners=getattr(ft, "store_partners", 2),
+                      n_bands=getattr(ft, "store_bands", 4))
+
+
+__all__ = ["CheckpointBackend", "DiskBackend", "MemBackend", "make_backend",
+           "StoreUnrecoverable"]

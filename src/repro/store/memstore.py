@@ -1,0 +1,310 @@
+"""MemStore: banded in-memory checkpoint shards in partner process memory.
+
+Data path (all of it over ``repro.comm.ReplicaTransport``, on reserved
+negative tags, so pushes inherit the paper's parallel cmp/rep routing,
+intercomm fill-in and send-ID dedup):
+
+  * ``begin_save``: each owner rank pickles its payload, splits the bytes
+    into ``n_bands`` shards, retains the shard set in its OWN workers'
+    memory (a local memcpy — ReStore keeps the checkpoint at the owner and
+    redundantly at partners, so a coordinated rollback does not need the
+    network for surviving ranks), and pushes every shard to each of its k
+    placement partners — from its computational endpoint AND its replica
+    endpoint, so both copies of a partner end up holding the shards and a
+    later promotion loses nothing;
+  * ``pump``: partner workers consume the pushes into their per-worker
+    stores and ack each complete (owner, generation) shard set back to the
+    owner;
+  * ``try_commit``: a generation is durable only once ALL partners of ALL
+    ranks have acked — the ranks then agree on the manifest with an
+    ``allgather`` — at which point the previous generation is dropped.
+    Until then the previous generation is retained: a crash mid-commit
+    (lost pushes, missing acks, dead partners) abandons the new generation
+    and recovery restores the previous one bitwise-identically.  This is
+    the two-generation, double-buffered mirror of ``checkpoint/io.py``'s
+    tmp + rename guarantee.
+
+``save`` bundles the three phases; tests drive them separately to land
+kills mid-commit.  Restores pull shards back from surviving partners
+(``repro.store.recovery``).
+"""
+from __future__ import annotations
+
+import pickle
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.comm import ReferenceCollectives
+from repro.store.placement import PartnerPlacement
+
+# reserved tag space (collectives use -11..-16; apps use tags >= 0)
+TAG_PUSH = -21
+TAG_ACK = -22
+TAG_FETCH = -23
+TAG_FETCH_REPLY = -24
+
+STORE_TAGS = frozenset({TAG_PUSH, TAG_ACK, TAG_FETCH, TAG_FETCH_REPLY})
+
+
+class _ShardSet:
+    """One (owner, generation) entry in a worker's store."""
+
+    __slots__ = ("step", "n_bands", "nbytes", "crcs", "bands")
+
+    def __init__(self, step: int, n_bands: int, nbytes: int, crcs):
+        self.step = step
+        self.n_bands = n_bands
+        self.nbytes = nbytes
+        self.crcs = tuple(crcs)
+        self.bands: Dict[int, np.ndarray] = {}
+
+    def add(self, band: int, data: np.ndarray) -> None:
+        self.bands[band] = data
+
+    def complete(self) -> bool:
+        if len(self.bands) != self.n_bands:
+            return False
+        return all(zlib.crc32(self.bands[b].tobytes()) == self.crcs[b]
+                   for b in range(self.n_bands))
+
+    def blob(self) -> bytes:
+        return b"".join(self.bands[b].tobytes()
+                        for b in range(self.n_bands))
+
+
+class MemStore:
+    """Replicated in-memory checkpoint store over a ReplicaTransport."""
+
+    def __init__(self, transport, topology, *, k_partners: int = 2,
+                 n_bands: int = 4):
+        self.transport = transport
+        self.topology = topology
+        self.k = k_partners
+        self.n_bands = n_bands
+        self.placement = PartnerPlacement(transport.rmap, topology,
+                                          k_partners)
+        # per-worker shard memory: worker id -> {(owner, gen): _ShardSet}
+        self.stores: Dict[int, Dict[Tuple[int, int], _ShardSet]] = {}
+        # generation metadata (shared bookkeeping standing in for what every
+        # rank tracks about its own pushes)
+        self.gens: Dict[int, dict] = {}
+        self.committed: Optional[int] = None
+        self.next_gen = 1
+        # observability
+        self.last_save_bytes = 0        # sum of per-rank payload bytes
+        self.committed_bytes = 0
+        self.pushes = 0
+        self.acks = 0
+        self.fetches = 0
+        self.local_reads = 0
+        self.direct_salvages = 0
+
+    # ------------------------------------------------------------- lifecycle
+
+    def rebind(self, topology=None, transport=None) -> None:
+        """Adopt a rebuilt world (elastic restart).  Worker shard memory
+        survives in the workers that survived; placement is recomputed for
+        the new replica map."""
+        if transport is not None:
+            self.transport = transport
+        if topology is not None:
+            self.topology = topology
+        self.placement = PartnerPlacement(self.transport.rmap, self.topology,
+                                          self.k)
+
+    def lose_worker(self, worker: int) -> None:
+        """The worker's memory is gone: its shard copies with it."""
+        self.stores.pop(worker, None)
+        self.transport.drop(worker)
+
+    # -------------------------------------------------------------- plumbing
+
+    def _rank_endpoints(self, rank: int) -> List[Any]:
+        """Live endpoints of a rank: computational first, then replica."""
+        rmap = self.transport.rmap
+        out = []
+        for w in (rmap.cmp.get(rank), rmap.rep.get(rank)):
+            if w is not None and w in self.transport.endpoints:
+                out.append(self.transport.endpoints[w])
+        return out
+
+    def _rank_reachable(self, rank: int) -> bool:
+        rmap = self.transport.rmap
+        return rmap.cmp.get(rank) in self.transport.endpoints
+
+    def _send(self, ep, dst_rank: int, tag: int, payload, step: int) -> None:
+        self.transport.send(ep, dst_rank, tag, payload, step, log=False)
+
+    def _drain(self, ep, tag: int):
+        """Consume every message with ``tag`` from ``ep`` (explicit source
+        scan — the store never uses wildcard receives, which would disturb
+        the transport's MPI_ANY_SOURCE forwarding order)."""
+        out = []
+        for src in range(self.transport.n):
+            while True:
+                m = self.transport.match_recv(ep, src, tag)
+                if m is None:
+                    break
+                out.append(m)
+        return out
+
+    @staticmethod
+    def _chunk(blob: bytes, n_bands: int) -> List[np.ndarray]:
+        arr = np.frombuffer(blob, dtype=np.uint8)
+        return [c.copy() for c in np.array_split(arr, n_bands)]
+
+    # ----------------------------------------------------------------- write
+
+    def begin_save(self, step: int, states: Dict[int, Any]) -> int:
+        """Phase 1: push every rank's banded shards to its partners."""
+        gen = self.next_gen
+        self.next_gen += 1
+        owners: Dict[int, dict] = {}
+        total = 0
+        for r in sorted(states):
+            blob = pickle.dumps(states[r], protocol=pickle.HIGHEST_PROTOCOL)
+            chunks = self._chunk(blob, self.n_bands)
+            crcs = tuple(zlib.crc32(c.tobytes()) for c in chunks)
+            partners = self.placement.partners_of(r)
+            # a partner that is fully dead right now can never ack; it is
+            # excluded from this generation's durability condition (the
+            # next elastic restart re-levels the placement)
+            expected = tuple(p for p in partners if self._rank_reachable(p))
+            owners[r] = {"partners": partners, "expected": expected,
+                         "nbytes": len(blob), "crcs": crcs}
+            total += len(blob)
+            # owner-local retention: surviving ranks roll back from their
+            # own memory, only dead ranks pull from partners
+            rmap = self.transport.rmap
+            for w in (rmap.cmp.get(r), rmap.rep.get(r)):
+                if w is None or w not in self.transport.endpoints:
+                    continue
+                ss = _ShardSet(step, self.n_bands, len(blob), crcs)
+                for b, chunk in enumerate(chunks):
+                    ss.add(b, chunk.copy())
+                self.stores.setdefault(w, {})[(r, gen)] = ss
+            for ep in self._rank_endpoints(r):
+                for p in expected:
+                    for b, chunk in enumerate(chunks):
+                        self._send(ep, p, TAG_PUSH,
+                                   ("push", r, gen, b, self.n_bands, step,
+                                    len(blob), crcs, chunk), step)
+                        self.pushes += 1
+        self.last_save_bytes = total
+        self.gens[gen] = {"step": step, "owners": owners,
+                          "acks": set(), "complete": False}
+        return gen
+
+    def pump(self, partner_workers=None) -> int:
+        """Phase 2: partner workers consume pushes and ack complete shard
+        sets; owners consume acks.  ``partner_workers`` restricts which
+        workers process their inboxes (tests use it to land kills
+        mid-commit).  Returns the number of acks recorded."""
+        rmap = self.transport.rmap
+        # partner intake
+        for w, ep in list(self.transport.endpoints.items()):
+            if partner_workers is not None and w not in partner_workers:
+                continue
+            role, my_rank = rmap.role_of(ep.wid)
+            if role == "dead":
+                continue
+            ws = self.stores.setdefault(w, {})
+            for m in self._drain(ep, TAG_PUSH):
+                _, r, gen, b, n_bands, step, nbytes, crcs, chunk = m.payload
+                key = (r, gen)
+                ss = ws.get(key)
+                if ss is None:
+                    ss = ws[key] = _ShardSet(step, n_bands, nbytes, crcs)
+                ss.add(b, chunk)
+                if ss.complete() and self._rank_reachable(r):
+                    self._send(ep, r, TAG_ACK, ("ack", r, gen, my_rank), step)
+        # owner ack intake (both role endpoints; acks are per partner rank)
+        recorded = 0
+        for r in range(rmap.n):
+            for ep in self._rank_endpoints(r):
+                for m in self._drain(ep, TAG_ACK):
+                    _, owner, gen, partner_rank = m.payload
+                    meta = self.gens.get(gen)
+                    if meta is None:
+                        continue
+                    if (owner, partner_rank) not in meta["acks"]:
+                        meta["acks"].add((owner, partner_rank))
+                        recorded += 1
+                        self.acks += 1
+        return recorded
+
+    def try_commit(self, gen: int) -> bool:
+        """Phase 3: durable once all partners acked.  Ranks agree on the
+        manifest with an allgather; the previous generation is dropped only
+        now (and retained on any failure)."""
+        meta = self.gens.get(gen)
+        if meta is None or meta["complete"]:
+            return meta is not None and meta["complete"]
+        need = {(r, p) for r, info in meta["owners"].items()
+                for p in info["expected"]}
+        if not need <= meta["acks"]:
+            return False
+        # manifest exchange: every rank allgathers its (gen, step, nbytes)
+        # entry; the agreed manifest is what recovery later validates
+        # pulled blobs against (in this collapsed world the votes come
+        # from one table, so the exchange distributes knowledge rather
+        # than detecting divergence)
+        ranks = sorted(meta["owners"])
+        coll = ReferenceCollectives(len(ranks))
+        pend = {i: coll.post(i, ("allgather",
+                                 (gen, meta["step"],
+                                  meta["owners"][r]["nbytes"])))
+                for i, r in enumerate(ranks)}
+        meta["manifest"] = coll.resolve(0, pend[0])
+        meta["complete"] = True
+        self.committed = gen
+        self.committed_bytes = sum(info["nbytes"]
+                                   for info in meta["owners"].values())
+        # prune: older generations (including abandoned ones) are dead now
+        for ws in self.stores.values():
+            for key in [k for k in ws if k[1] < gen]:
+                del ws[key]
+        for g in [g for g in self.gens if g < gen]:
+            del self.gens[g]
+        return True
+
+    def save(self, step: int, states: Dict[int, Any]) -> int:
+        """Push + pump + commit in one synchronous round.  When a partner
+        died mid-round the generation stays incomplete and the previous
+        one remains the durable restore point."""
+        gen = self.begin_save(step, states)
+        self.pump()
+        self.try_commit(gen)
+        return gen
+
+    # ------------------------------------------------------------------ read
+
+    def durable(self) -> Optional[Tuple[int, int]]:
+        """(generation, step) of the newest committed generation."""
+        if self.committed is None:
+            return None
+        return self.committed, self.gens[self.committed]["step"]
+
+    def recoverable_without(self, dead_workers,
+                            gen: Optional[int] = None) -> bool:
+        """Would the durable generation survive losing ``dead_workers`` on
+        top of the deaths already recorded?  (Recovery planners ask this
+        BEFORE the deaths are applied to the store.)"""
+        gen = self.committed if gen is None else gen
+        meta = self.gens.get(gen) if gen is not None else None
+        if meta is None or not meta["complete"]:
+            return False
+        dead = set(dead_workers)
+        for rank in meta["owners"]:
+            if not any((rank, gen) in ws and ws[(rank, gen)].complete()
+                       for w, ws in self.stores.items() if w not in dead):
+                return False
+        return True
+
+    def restore(self, gen: Optional[int] = None):
+        """Pull every rank's payload back from surviving partner shards.
+        Returns ({rank: payload}, step); raises StoreUnrecoverable."""
+        from repro.store.recovery import StoreRecovery
+        return StoreRecovery(self).pull(gen)

@@ -1,0 +1,153 @@
+"""Shift-by-k partner-group placement for the in-memory store.
+
+Every rank pushes its checkpoint shards to k *partner* ranks.  For the
+store to survive any f <= k failures, a shard must never share a failure
+domain with its owner: a partner's workers may live neither on the owner's
+computational node nor on the owner's replica node (the owner's replica
+pair already holds a live copy of the state — co-locating shards with it
+would make one node loss take out both).
+
+The *failure domain* of a rank is the set of nodes hosting its surviving
+copies (computational worker + replica worker, when replicated).  Partners
+are chosen by scanning shifts (r + s) mod n for s = 1, 2, ... — the
+shift-by-k pattern of ReStore — in three preference passes:
+
+  1. domain disjoint from the owner AND from every already-chosen partner
+     (the strong form: owner + partners occupy k+1 pairwise-disjoint
+     domains, so ANY f <= k worker/node/pair deaths leave a holder alive);
+  2. domain disjoint from the owner only (sufficient for k <= 2 whenever
+     each rank's two copies sit on different nodes: one death can never
+     fell a whole partner);
+  3. any distinct rank (*degraded*: the topology is too small to separate
+     failure domains at all — the store still helps, but `tolerance()`
+     reports what it can actually absorb).
+
+``tolerance()`` verifies the guarantee by brute force over every scenario
+of f node deaths and pair deaths (which dominate single-worker deaths),
+and is the oracle the property tests check against.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, FrozenSet, List, Tuple
+
+
+class PlacementError(ValueError):
+    """No admissible partner group exists for some rank."""
+
+
+class PartnerPlacement:
+    def __init__(self, rmap, topology, k_partners: int = 2):
+        if k_partners < 1:
+            raise PlacementError("need at least one partner per rank")
+        self.rmap = rmap
+        self.topology = topology
+        self.k = k_partners
+        self.degraded = False
+        self._partners: Dict[int, Tuple[int, ...]] = {}
+        for r in range(rmap.n):
+            self._partners[r] = self._pick(r)
+
+    # -- queries -------------------------------------------------------------
+
+    def partners_of(self, rank: int) -> Tuple[int, ...]:
+        return self._partners[rank]
+
+    def domain(self, rank: int) -> FrozenSet[int]:
+        """Nodes hosting this rank's live copies (cmp + replica)."""
+        nodes = set()
+        for w in (self.rmap.cmp.get(rank), self.rmap.rep.get(rank)):
+            if w is not None and w not in self.rmap.dead:
+                nodes.add(self.topology.node_of(w))
+        return frozenset(nodes)
+
+    def holders_of(self, rank: int) -> List[int]:
+        """Live workers holding a copy of this rank's shards (the partner
+        ranks' computational + replica workers)."""
+        out = []
+        for p in self._partners[rank]:
+            for w in (self.rmap.cmp.get(p), self.rmap.rep.get(p)):
+                if w is not None and w not in self.rmap.dead:
+                    out.append(w)
+        return out
+
+    # -- selection -----------------------------------------------------------
+
+    def _pick(self, r: int) -> Tuple[int, ...]:
+        n = self.rmap.n
+        own = self.domain(r)
+        order = [(r + s) % n for s in range(1, n)]
+        chosen: List[int] = []
+        domains: List[FrozenSet[int]] = []
+        for q in order:                         # pass 1: pairwise disjoint
+            d = self.domain(q)
+            if d & own or any(d & c for c in domains):
+                continue
+            chosen.append(q)
+            domains.append(d)
+            if len(chosen) == self.k:
+                return tuple(chosen)
+        for q in order:                         # pass 2: owner-disjoint
+            if q in chosen or self.domain(q) & own:
+                continue
+            chosen.append(q)
+            if len(chosen) == self.k:
+                return tuple(chosen)
+        for q in order:                         # pass 3: degraded
+            if q in chosen:
+                continue
+            self.degraded = True
+            chosen.append(q)
+            if len(chosen) == self.k:
+                return tuple(chosen)
+        if not chosen:
+            raise PlacementError(
+                f"rank {r}: no partner candidates in a {n}-rank world")
+        self.degraded = True
+        return tuple(chosen)
+
+    # -- verification --------------------------------------------------------
+
+    def _death_units(self) -> List[Tuple[int, ...]]:
+        """Atomic failure units: whole nodes and replica pairs.  A single
+        worker death is dominated by its node's death, so checking nodes +
+        pairs covers every worker/node/pair mix."""
+        units = [tuple(self.topology.workers_on(nd))
+                 for nd in range(self.topology.n_nodes)]
+        for r in range(self.rmap.n):
+            pair = tuple(w for w in (self.rmap.cmp.get(r),
+                                     self.rmap.rep.get(r)) if w is not None)
+            if pair:
+                units.append(pair)
+        return units
+
+    def survives(self, dead_workers) -> bool:
+        """True iff every rank still has a live copy of its state: its own
+        worker pair, or a partner worker holding its shards."""
+        dead = set(dead_workers) | set(self.rmap.dead)
+        for r in range(self.rmap.n):
+            own_alive = any(
+                w is not None and w not in dead
+                for w in (self.rmap.cmp.get(r), self.rmap.rep.get(r)))
+            if own_alive:
+                continue
+            if not any(w not in dead for w in self.holders_of(r)):
+                return False
+        return True
+
+    def tolerance(self, max_units: int = 24) -> int:
+        """Largest f <= k such that EVERY combination of f unit deaths
+        (nodes, pairs) leaves every rank recoverable.  Exhaustive — the
+        worlds this runs on are small."""
+        units = self._death_units()
+        if len(units) > max_units:
+            raise PlacementError(
+                f"tolerance check over {len(units)} units is too large")
+        best = 0
+        for f in range(1, self.k + 1):
+            for combo in itertools.combinations(units, f):
+                dead = set(itertools.chain.from_iterable(combo))
+                if not self.survives(dead):
+                    return best
+            best = f
+        return best

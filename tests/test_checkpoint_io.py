@@ -84,3 +84,47 @@ def test_measured_write_time_feeds_young_daly(tmp_path):
     ck = Checkpointer(str(tmp_path))
     dt = ck.save(1, _state())
     assert dt > 0 and ck.last_write_s == dt
+
+
+def test_fsync_before_rename_publishes(tmp_path, monkeypatch):
+    """Durability ordering: every band file + the manifest + the tmp dir
+    are fsync'd BEFORE the rename makes the checkpoint visible, and the
+    LATEST pointer is fsync'd before os.replace publishes it — otherwise
+    the atomic-rename guarantee does not survive a crash."""
+    events = []
+    real_fsync, real_rename, real_replace = os.fsync, os.rename, os.replace
+
+    fd_paths = {}
+    real_open = os.open
+
+    def spy_open(path, *a, **kw):
+        fd = real_open(path, *a, **kw)
+        fd_paths[fd] = str(path)
+        return fd
+
+    monkeypatch.setattr(os, "open", spy_open)
+    monkeypatch.setattr(os, "fsync",
+                        lambda fd: (events.append(("fsync",
+                                                   fd_paths.get(fd, "?"))),
+                                    real_fsync(fd))[1])
+    monkeypatch.setattr(os, "rename",
+                        lambda a, b: (events.append(("rename", str(a))),
+                                      real_rename(a, b))[1])
+    monkeypatch.setattr(os, "replace",
+                        lambda a, b: (events.append(("replace", str(a))),
+                                      real_replace(a, b))[1])
+
+    ck = Checkpointer(str(tmp_path), n_bands=3)
+    ck.save(1, _state())
+
+    kinds = [k for k, _ in events]
+    rename_at = kinds.index("rename")
+    pre_rename_fsyncs = [p for k, p in events[:rename_at] if k == "fsync"]
+    # 3 band files + the tmp dir fsync'd before the publish (fd numbers
+    # are reused, so the manifest fsync may carry a stale band path —
+    # hence >=)
+    assert sum("band_" in p for p in pre_rename_fsyncs) >= 3
+    assert any(p.endswith(".tmp_step_00000001") for p in pre_rename_fsyncs)
+    assert kinds.count("fsync") >= 6        # + manifest, dir, LATEST, dir
+    replace_at = kinds.index("replace")
+    assert rename_at < replace_at           # checkpoint before the pointer

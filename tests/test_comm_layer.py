@@ -1,8 +1,8 @@
 """The repro.comm layer: every collective (allreduce/barrier/bcast/gather/
-reduce_scatter/alltoall) against a straight-line numpy reference, with and
-without replication, exactly-once delivery across mid-collective kills, and
-MPI_ANY_SOURCE wildcard forwarding (which repro.apps no longer exercises
-since PIC moved to alltoall)."""
+allgather/reduce_scatter/alltoall/scan) against a straight-line numpy
+reference, with and without replication, exactly-once delivery across
+mid-collective kills, and MPI_ANY_SOURCE wildcard forwarding (which
+repro.apps no longer exercises since PIC moved to alltoall)."""
 import numpy as np
 import pytest
 
@@ -32,7 +32,8 @@ class CollectiveZoo:
 
     def init_state(self, rank: int) -> dict:
         return {k: np.zeros(self.shape)
-                for k in ("sum", "max", "bcast", "gather", "rs", "a2a")}
+                for k in ("sum", "max", "bcast", "gather", "rs", "a2a",
+                          "ag", "scan")}
 
     def step(self, rank, state, t):
         n = self.n_ranks
@@ -43,16 +44,20 @@ class CollectiveZoo:
         # land mid-collective with real traffic to drain and replay
         b = yield ("bcast", v + 7.0, root)
         g = yield ("gather", v * 2.0, root)
+        ag = yield ("allgather", v - 1.0)
         rs = yield ("reduce_scatter", [v + d for d in range(n)], "sum")
         a2a = yield ("alltoall", [v * (d + 1) for d in range(n)])
+        sc = yield ("scan", v * 0.5, "sum")
         s = yield ("allreduce", v, "sum")
         m = yield ("allreduce", v, "max")
         yield ("barrier",)
         g_fold = np.add.reduce(np.stack(g), axis=0) if g is not None else 0.0
+        ag_fold = np.add.reduce(np.stack(ag), axis=0)
         a2a_fold = np.add.reduce(np.stack(a2a), axis=0)
         return {"sum": state["sum"] + s, "max": state["max"] + m,
                 "bcast": state["bcast"] + b, "gather": state["gather"] + g_fold,
-                "rs": state["rs"] + rs, "a2a": state["a2a"] + a2a_fold}
+                "rs": state["rs"] + rs, "a2a": state["a2a"] + a2a_fold,
+                "ag": state["ag"] + ag_fold, "scan": state["scan"] + sc}
 
     def check(self, states) -> float:
         return float(sum(float(np.sum(a)) for s in states.values()
@@ -62,13 +67,15 @@ class CollectiveZoo:
 def zoo_reference(n: int, shape, steps: int):
     """Straight-line numpy re-derivation of CollectiveZoo's final state."""
     states = {r: {k: np.zeros(shape) for k in
-                  ("sum", "max", "bcast", "gather", "rs", "a2a")}
+                  ("sum", "max", "bcast", "gather", "rs", "a2a",
+                   "ag", "scan")}
               for r in range(n)}
     for t in range(steps):
         root = t % n
         vs = {r: pay(r, t, shape) for r in range(n)}
         ar_sum = np.sum(np.stack([vs[r] for r in range(n)]), axis=0)
         ar_max = np.max(np.stack([vs[r] for r in range(n)]), axis=0)
+        ag_fold = np.sum(np.stack([vs[s] - 1.0 for s in range(n)]), axis=0)
         for r in range(n):
             states[r]["sum"] = states[r]["sum"] + ar_sum
             states[r]["max"] = states[r]["max"] + ar_max
@@ -76,10 +83,15 @@ def zoo_reference(n: int, shape, steps: int):
             if r == root:
                 states[r]["gather"] = states[r]["gather"] + np.sum(
                     np.stack([vs[s] * 2.0 for s in range(n)]), axis=0)
+            states[r]["ag"] = states[r]["ag"] + ag_fold
             states[r]["rs"] = states[r]["rs"] + np.sum(
                 np.stack([vs[s] + r for s in range(n)]), axis=0)
             states[r]["a2a"] = states[r]["a2a"] + np.sum(
                 np.stack([vs[s] * (r + 1) for s in range(n)]), axis=0)
+            scan_r = vs[0] * 0.5
+            for s in range(1, r + 1):
+                scan_r = scan_r + vs[s] * 0.5
+            states[r]["scan"] = states[r]["scan"] + scan_r
     return states
 
 
@@ -263,6 +275,10 @@ def test_reference_result_semantics():
     assert reference_result("bcast", votes, 2, n, 1) == 2.0
     assert reference_result("gather", votes, 1, n, 1) == [1.0, 2.0, 3.0]
     assert reference_result("gather", votes, 0, n, 1) is None
+    assert reference_result("allgather", votes, 2, n) == [1.0, 2.0, 3.0]
+    assert reference_result("scan", votes, 0, n, "sum") == 1.0
+    assert reference_result("scan", votes, 2, n, "sum") == 6.0
+    assert reference_result("scan", votes, 1, n, "max") == 2.0
     chunks = {r: [10 * r + d for d in range(n)] for r in range(n)}
     assert reference_result("reduce_scatter", chunks, 1, n, "sum") == 33
     assert reference_result("alltoall", chunks, 2, n) == [2, 12, 22]

@@ -1,0 +1,448 @@
+"""repro.store: partner placement invariants (property-based), bitwise
+recovery under every f <= k worker/node/pair death combination, the
+two-generation commit protocol under mid-commit kills, the
+CheckpointBackend selection, and the memory backend driven end-to-end
+through FTSession and SimRuntime."""
+import copy
+import itertools
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.comm import ReplicaTransport
+from repro.configs.base import FTConfig
+from repro.core import ckpt_policy
+from repro.core.coordinator import ClusterTopology
+from repro.core.failure_sim import FailureEvent
+from repro.core.replica_map import ApplicationDead, ReplicaMap
+from repro.core.shrink import plan_recovery
+from repro.ft import FTSession
+from repro.simrt import CostModel, SimRuntime
+from repro.store import (DiskBackend, MemBackend, MemStore, PartnerPlacement,
+                         StoreUnrecoverable)
+
+
+def build_world(n, m, wpn, k=2, bands=3):
+    rmap = ReplicaMap(n, m)
+    topo = ClusterTopology(rmap.world_size, wpn)
+    t = ReplicaTransport(rmap, n)
+    for w in rmap.alive():
+        t.register(w)
+    return rmap, topo, t, MemStore(t, topo, k_partners=k, n_bands=bands)
+
+
+def rank_states(n, seed, shape=(7,)):
+    rng = np.random.default_rng(seed)
+    return {r: {"x": rng.standard_normal(shape),
+                "i": np.int32(seed * 100 + r),
+                "nested": {"u8": rng.integers(0, 255, (3, 2), dtype=np.uint8)}}
+            for r in range(n)}
+
+
+def assert_states_bitwise(got, want):
+    for r in want:
+        for key in ("x", "i"):
+            np.testing.assert_array_equal(got[r][key], want[r][key])
+            assert got[r][key].dtype == want[r][key].dtype
+        np.testing.assert_array_equal(got[r]["nested"]["u8"],
+                                      want[r]["nested"]["u8"])
+
+
+def respawn_world(store, topo, n):
+    """Mirror the runtimes' elastic restart: fresh full map, fresh
+    transport, store rebound with shard memory carried over."""
+    rmap = store.transport.rmap.restart_map(store.transport.rmap.world_size)
+    t = ReplicaTransport(rmap, n)
+    for w in rmap.alive():
+        t.register(w)
+    store.rebind(topology=topo, transport=t)
+    return rmap
+
+
+# ----------------------------------------------------------- placement
+
+@given(n=st.integers(2, 8), wpn=st.integers(1, 4),
+       replicated=st.booleans(), k=st.integers(1, 3))
+@settings(max_examples=60, deadline=None)
+def test_placement_invariants(n, wpn, replicated, k):
+    m = n if replicated else 0
+    rmap = ReplicaMap(n, m)
+    topo = ClusterTopology(rmap.world_size, wpn)
+    pl = PartnerPlacement(rmap, topo, k_partners=k)
+    for r in range(n):
+        partners = pl.partners_of(r)
+        assert r not in partners
+        assert len(partners) == len(set(partners)) <= k
+        if not pl.degraded:
+            # no shard shares a failure domain with its owner
+            assert len(partners) == min(k, n - 1)
+            for p in partners:
+                assert not (pl.domain(p) & pl.domain(r))
+    # the brute-force tolerance oracle never exceeds k and is consistent
+    # with the survives() predicate it is built on
+    tol = pl.tolerance()
+    assert 0 <= tol <= k
+    assert pl.survives(())
+
+
+def test_placement_full_tolerance_on_separated_topologies():
+    """Node-separated cmp/rep slices (the paper's placement) admit the
+    full f <= k guarantee."""
+    for n, wpn in ((4, 2), (8, 4), (8, 2), (6, 2)):
+        rmap = ReplicaMap(n, n)
+        topo = ClusterTopology(rmap.world_size, wpn)
+        pl = PartnerPlacement(rmap, topo, k_partners=2)
+        assert not pl.degraded
+        assert pl.tolerance() == 2
+
+
+def test_placement_shift_pattern_never_colocates():
+    rmap = ReplicaMap(4, 4)
+    topo = ClusterTopology(8, 2)
+    pl = PartnerPlacement(rmap, topo, k_partners=2)
+    # ranks 0/1 share nodes {0, 2}; ranks 2/3 share {1, 3} -> partners must
+    # come from the other node group
+    assert pl.partners_of(0) == (2, 3)
+    assert pl.partners_of(1) == (2, 3)
+    assert pl.partners_of(2) == (0, 1)
+    assert pl.partners_of(3) == (0, 1)
+
+
+# -------------------------------------------- bitwise recovery, f <= k
+
+def death_units(rmap, topo):
+    units = [tuple(topo.workers_on(nd)) for nd in range(topo.n_nodes)]
+    units += [tuple(w for w in (rmap.cmp[r], rmap.rep[r]) if w is not None)
+              for r in range(rmap.n)]
+    return units
+
+
+@pytest.mark.parametrize("n,wpn", [(4, 2), (8, 2)])
+def test_bitwise_recovery_after_any_f_le_k_deaths(n, wpn):
+    """Every combination of f <= k node/pair deaths (which dominate single
+    worker deaths) leaves every rank's committed state bitwise
+    recoverable."""
+    k = 2
+    base_rmap, topo, _t, base_store = build_world(n, n, wpn, k=k)
+    want = rank_states(n, seed=7)
+    base_store.save(5, rank_states(n, seed=3))       # older generation
+    base_store.save(9, want)                          # durable generation
+    units = death_units(base_rmap, topo)
+    for f in (1, 2):
+        for combo in itertools.combinations(units, f):
+            dead = sorted(set(itertools.chain.from_iterable(combo)))
+            store = copy.deepcopy(base_store)
+            rmap = store.transport.rmap
+            try:
+                rmap.fail_many(dead)
+            except ApplicationDead:
+                pass
+            for w in dead:
+                store.lose_worker(w)
+            respawn_world(store, topo, n)
+            got, step = store.restore()
+            assert step == 9, f"combo {combo}"
+            assert_states_bitwise(got, want)
+
+
+def test_more_than_k_domain_deaths_is_unrecoverable():
+    n = 4
+    _rmap, topo, _t, store = build_world(n, n, 2, k=2)
+    store.save(1, rank_states(n, seed=1))
+    # kill rank 0's pair AND both partner pairs of rank 0 (3 pair deaths
+    # > k): rank 0 has no surviving copy anywhere
+    victims = []
+    for r in (0,) + store.placement.partners_of(0):
+        victims += [r, r + n]
+    rmap = store.transport.rmap
+    try:
+        rmap.fail_many(victims)
+    except ApplicationDead:
+        pass
+    for w in victims:
+        store.lose_worker(w)
+    respawn_world(store, topo, n)
+    with pytest.raises(StoreUnrecoverable):
+        store.restore()
+
+
+# ------------------------------------------------- two-generation commit
+
+def test_mid_commit_death_restores_previous_generation_bitwise():
+    """A pair death landing between the push and the acks abandons the
+    in-flight generation; the PREVIOUS generation was retained and
+    restores bitwise-identically (the tmp+rename guarantee in memory)."""
+    n = 4
+    _rmap, topo, _t, store = build_world(n, n, 2, k=2)
+    want = rank_states(n, seed=11)
+    store.save(4, want)
+    assert store.durable() == (1, 4)
+
+    g2 = store.begin_save(8, rank_states(n, seed=12))
+    # rank 2 (a partner of ranks 0 and 1) dies WHOLE — cmp and rep — before
+    # anything is pumped: its acks can never arrive
+    rmap = store.transport.rmap
+    try:
+        rmap.fail_many([2, 2 + n])
+    except ApplicationDead:
+        pass
+    store.lose_worker(2)
+    store.lose_worker(2 + n)
+    store.pump()
+    assert not store.try_commit(g2)
+    assert store.durable() == (1, 4)                 # previous gen retained
+
+    respawn_world(store, topo, n)
+    got, step = store.restore()
+    assert step == 4
+    assert_states_bitwise(got, want)
+
+
+def test_partial_ack_does_not_commit():
+    n = 4
+    _rmap, topo, _t, store = build_world(n, n, 2, k=2)
+    store.save(2, rank_states(n, seed=5))
+    g2 = store.begin_save(6, rank_states(n, seed=6))
+    store.pump(partner_workers=[0])                  # one worker's acks only
+    assert not store.try_commit(g2)
+    assert store.durable() == (1, 2)
+    store.pump()                                     # the rest arrive: commit
+    assert store.try_commit(g2)
+    assert store.durable() == (g2, 6)
+    # committing pruned the previous generation everywhere
+    assert all(g == g2 for ws in store.stores.values() for (_o, g) in ws)
+
+
+def test_promotion_keeps_partner_copies():
+    """The replica-side push means a promoted worker still holds every
+    shard its dead twin held — a later restore needs no re-push."""
+    n = 4
+    _rmap, topo, _t, store = build_world(n, n, 2, k=2)
+    want = rank_states(n, seed=21)
+    store.save(3, want)
+    rmap = store.transport.rmap
+    ev = rmap.fail(2)                                # cmp of rank 2 dies
+    assert ev["kind"] == "promote"
+    store.lose_worker(2)
+    # now kill rank 0 entirely (its partners are ranks 2 and 3)
+    try:
+        rmap.fail_many([0, n])
+    except ApplicationDead:
+        pass
+    store.lose_worker(0)
+    store.lose_worker(n)
+    respawn_world(store, topo, n)
+    got, step = store.restore()
+    assert step == 3
+    assert_states_bitwise(got, want)
+
+
+# ------------------------------------------------------ plan_recovery
+
+def test_plan_recovery_consults_store():
+    n = 4
+    rmap, _topo, _t, store = build_world(n, n, 2, k=2)
+    store.save(6, rank_states(n, seed=2))
+    new_map, plan = plan_recovery(rmap, [1, 1 + n], last_ckpt_step=0,
+                                  current_step=9, store=store)
+    assert plan.kind == "restart_elastic"
+    assert plan.restore_backend == "memory"
+    assert plan.rollback_to_step == 6                # the store's durable gen
+    assert plan.restore_cost_s < 61.0                # network-bound, not disk
+    no_store_map, plan2 = plan_recovery(ReplicaMap(n, n), [1, 1 + n],
+                                        last_ckpt_step=0, current_step=9)
+    assert plan2.restore_backend == "disk"
+
+
+def test_plan_recovery_does_not_promise_unservable_memory_restore():
+    """When the incoming deaths would take the last complete shard copies
+    with them, the plan must fall back to the disk/scratch story instead
+    of advertising a memory restore that will raise StoreUnrecoverable."""
+    n = 4
+    rmap, _topo, _t, store = build_world(n, n, 2, k=2)
+    store.save(6, rank_states(n, seed=2))
+    # rank 0's pair plus both of its partner pairs die in ONE event
+    victims = []
+    for r in (0,) + store.placement.partners_of(0):
+        victims += [r, r + n]
+    assert not store.recoverable_without(victims)
+    _new_map, plan = plan_recovery(rmap, victims, last_ckpt_step=0,
+                                   current_step=9, store=store)
+    assert plan.kind == "restart_elastic"
+    # a memory-backed world with no servable copy restarts from scratch —
+    # the plan must say so, not advertise a disk it does not have
+    assert plan.restore_backend == "scratch"
+    assert plan.rollback_to_step == 0
+
+
+# ------------------------------------------------------- backends / FT
+
+class CounterWorkload:
+    disk_checkpointable = False
+
+    def init_state(self):
+        return {"x": np.float64(1.0), "hist": np.zeros(4)}
+
+    def step(self, state, t):
+        x = state["x"] * 1.0000001 + np.sin(0.1 * t)
+        hist = np.roll(state["hist"], 1)
+        hist[0] = x
+        return {"x": x, "hist": hist}, float(x)
+
+
+class DiskCounterWorkload(CounterWorkload):
+    disk_checkpointable = True
+
+
+def _run(mode, injector=None, *, backend="disk", cls=CounterWorkload,
+         ckpt_dir=None, ckpt_interval=0.0, n=8, wpn=4, steps=12):
+    session = FTSession(ft=FTConfig(mode=mode, ckpt_interval_s=ckpt_interval,
+                                    ckpt_backend=backend),
+                        injector=injector, ckpt_dir=ckpt_dir,
+                        n_logical_workers=n, workers_per_node=wpn)
+    return session, session.run(cls(), steps)
+
+
+def test_backend_selection(tmp_path):
+    s, _ = _run("combined", ckpt_dir=str(tmp_path), cls=DiskCounterWorkload,
+                ckpt_interval=4.0)
+    assert isinstance(s.strategy.backend, DiskBackend)
+    assert s.ckpt is not None                        # legacy alias points in
+    s, _ = _run("combined", ckpt_interval=4.0)       # no dir -> memory store
+    assert isinstance(s.strategy.backend, MemBackend)
+    s, _ = _run("combined", backend="memory", ckpt_dir=str(tmp_path),
+                cls=DiskCounterWorkload, ckpt_interval=4.0)
+    assert isinstance(s.strategy.backend, MemBackend)
+    with pytest.raises(ValueError):
+        _run("combined", backend="tape")
+
+
+def test_session_pair_death_memory_backend_bitwise():
+    """FT theorem through the memory backend: promote, then pair death,
+    elastic restart restored from partner shards — final state identical
+    to the failure-free run."""
+    _, clean = _run("none")
+    session, rep = _run("combined", {4: [1], 8: [9]}, backend="memory",
+                        ckpt_interval=4.0)
+    assert rep.promotions == 1 and rep.restarts == 1
+    assert rep.ckpt_writes >= 1 and rep.rolled_back_steps > 0
+    restart = [e for e in rep.events if e.kind == "restart_elastic"]
+    assert restart and restart[0].detail["restore_backend"] == "memory"
+    assert clean.final_state["x"] == rep.final_state["x"]
+    np.testing.assert_array_equal(clean.final_state["hist"],
+                                  rep.final_state["hist"])
+    assert session.strategy.backend.store.durable() is not None
+
+
+def test_session_checkpoint_only_memory_backend():
+    _, clean = _run("none")
+    _, rep = _run("checkpoint", {7: [2]}, backend="memory", ckpt_interval=3.0)
+    assert rep.restarts == 1 and rep.ckpt_writes >= 1
+    assert clean.final_state["x"] == rep.final_state["x"]
+
+
+# ----------------------------------------------------------- SimRuntime
+
+class AllreduceApp:
+    """Tiny deterministic app: one exchange + one allreduce per step."""
+
+    def __init__(self, n_ranks=4):
+        self.n_ranks = n_ranks
+
+    def init_state(self, rank):
+        return {"acc": np.zeros(5), "ring": np.zeros(5)}
+
+    def step(self, rank, state, t):
+        n = self.n_ranks
+        v = (np.arange(5, dtype=np.float64) + 1) * (rank + 1) * (t + 2)
+        got = yield ("exchange", {(rank + 1) % n: v, (rank - 1) % n: v * 2},
+                     3)
+        total = yield ("allreduce", v, "sum")
+        ring = sum(got.values())
+        return {"acc": state["acc"] + total, "ring": state["ring"] + ring}
+
+    def check(self, states):
+        return float(sum(s["acc"].sum() + s["ring"].sum()
+                         for s in states.values()))
+
+
+def _simrt(backend, events=(), n=4, steps=8):
+    ft = FTConfig(mode="combined", replication_degree=1.0, mtbf_s=1e9,
+                  ckpt_interval_s=3.0, ckpt_backend=backend)
+    costs = CostModel(step_time_s=1.0, ckpt_cost_s=0.5, restore_cost_s=0.5,
+                      mem_ckpt_cost_s=0.01, mem_restore_cost_s=0.02)
+    rt = SimRuntime(AllreduceApp(n), ft, costs=costs,
+                    failure_events=list(events), workers_per_node=2)
+    return rt, rt.run(steps)
+
+
+def test_simrt_memory_backend_pair_death_bitwise():
+    _, clean = _simrt("disk")                        # no dir: _ckpt_mem path
+    rt, faulty = _simrt("memory", [FailureEvent(1.5, (1,)),
+                                   FailureEvent(4.2, (1 + 4, ))])
+    assert faulty.restarts == 1
+    assert faulty.store_restores == 1 and faulty.store_fallbacks == 0
+    for r in range(4):
+        for key in ("acc", "ring"):
+            np.testing.assert_array_equal(faulty.states[r][key],
+                                          clean.states[r][key])
+    assert faulty.check_value == pytest.approx(clean.check_value, abs=0)
+
+
+def test_simrt_memory_backend_network_bound_accounting():
+    """Virtual time charges the memory backend's network-bound C/R, not
+    the disk constants."""
+    _rt_d, disk = _simrt("disk")
+    rt_m, mem = _simrt("memory")
+    writes = mem.time.ckpt_write / 0.01
+    assert writes == pytest.approx(round(writes))    # integral multiple of C
+    assert mem.time.ckpt_write < disk.time.ckpt_write
+    assert rt_m.store is not None and rt_m.store.durable() is not None
+
+
+def test_simrt_rejects_unknown_backend():
+    """Typo'd backend names must fail loudly, not silently run on disk
+    costs (FTSession's make_backend raises the same way)."""
+    with pytest.raises(ValueError):
+        SimRuntime(AllreduceApp(4),
+                   FTConfig(mode="combined", ckpt_backend="mem"),
+                   workers_per_node=2)
+
+
+def test_simrt_memory_backend_young_daly_uses_mem_cost():
+    ft = FTConfig(mode="combined", mtbf_s=800.0, ckpt_backend="memory")
+    costs = CostModel(step_time_s=1.0, ckpt_cost_s=50.0, mem_ckpt_cost_s=0.25)
+    rt = SimRuntime(AllreduceApp(4), ft, costs=costs, workers_per_node=2)
+    want = ckpt_policy.young_daly_interval(800.0, 0.25)
+    assert rt.coords.primary.ckpt_interval_s == pytest.approx(want)
+
+
+# ------------------------------------------------------------ cost model
+
+def test_memstore_cost_model():
+    c = ckpt_policy.memstore_ckpt_cost(1.4e9, n_partners=2,
+                                       net_bw_Bps=12.5e9)
+    assert 0.2 < c < 0.3                             # network-bound seconds
+    assert ckpt_policy.memstore_ckpt_cost(0.0) > 0   # latency floor
+    with pytest.raises(ValueError):
+        ckpt_policy.memstore_ckpt_cost(-1.0)
+    r = ckpt_policy.memstore_restore_cost(1.4e9, relaunch_s=60.0)
+    assert 60.0 < r < 61.0
+
+
+def test_combined_crossover_moves_down_with_memory_backend():
+    """The acceptance shape of fig14: lower C -> shorter Young-Daly
+    interval -> the combined mode overtakes plain checkpoint/restart at a
+    SMALLER process count."""
+    c_mem = ckpt_policy.memstore_ckpt_cost(1.4e9)
+    r_disk = 46.0 + 1000.0
+    cross_disk = ckpt_policy.combined_crossover_processes(
+        1024, 16000.0, 46.0, restart_cost_s=r_disk,
+        combined_restart_cost_s=r_disk)
+    cross_mem = ckpt_policy.combined_crossover_processes(
+        1024, 16000.0, 46.0, combined_ckpt_cost_s=c_mem,
+        restart_cost_s=r_disk,
+        combined_restart_cost_s=ckpt_policy.memstore_restore_cost(1.4e9))
+    assert cross_disk > 0 and cross_mem > 0
+    assert cross_mem < cross_disk
