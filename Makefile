@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint check bench bench-smoke bench-store
+.PHONY: test lint check bench bench-smoke bench-store bench-topo
 
 test:
 	$(PY) -m pytest -x -q
@@ -23,8 +23,12 @@ bench:
 
 # the cheap failure-pipeline subset CI runs on every push
 bench-smoke:
-	$(PY) -m benchmarks.run --only fig13_log_replay --only fig9_time_distribution --only fig14_memstore
+	$(PY) -m benchmarks.run --only fig13_log_replay --only fig9_time_distribution --only fig14_memstore --only fig15_topology
 
 # the disk-vs-memory checkpoint backend comparison (repro.store)
 bench-store:
 	$(PY) -m benchmarks.run --only fig14_memstore
+
+# topology-priced collectives: dense vs tree/ring + per-topology crossover
+bench-topo:
+	$(PY) -m benchmarks.run --only fig15_topology

@@ -5,6 +5,11 @@ node-centred velocities, slab decomposition along y, one halo row exchanged
 per neighbour per step, and a global CFL reduction (allreduce min) for the
 timestep — the same BSP skeleton as the paper's CloverLeaf runs.
 
+The halo exchange is a ``neighbor_alltoall`` over the slab decomposition's
+dist_graph neighbor lists (repro.topo.graph.line_neighbors) — the MPI
+``MPI_Neighbor_alltoall`` idiom — so it runs through the collective engine
+(logging/replay/dedup) instead of raw point-to-point exchanges.
+
 The hydro scheme is a simplified explicit predictor (ideal-gas EOS,
 artificial-viscosity-free) — the physics fidelity is irrelevant to the FT
 mechanics; determinism and the communication pattern are what matter.
@@ -13,7 +18,8 @@ from __future__ import annotations
 
 import numpy as np
 
-TAG_HALO = 2
+from repro.topo.graph import line_neighbors
+
 GAMMA = 1.4
 
 
@@ -24,6 +30,8 @@ class CloverLeaf:
         self.nx = nx
         self.ny = ny_local
         self.seed = seed
+        # dist_graph of the slab decomposition: rank r borders r-1 / r+1
+        self.halo_graph = line_neighbors(n_ranks)
 
     def init_state(self, rank: int) -> dict:
         nx, ny = self.nx, self.ny
@@ -42,22 +50,21 @@ class CloverLeaf:
         return (GAMMA - 1.0) * rho * e
 
     def step(self, rank, state, step_idx):
-        n = self.n_ranks
         rho, e, u, v = state["rho"], state["e"], state["u"], state["v"]
         p = self._pressure(rho, e)
 
-        # halo exchange: boundary rows of (rho, p, v) with y-neighbours
+        # halo exchange: boundary rows of (rho, p, v) with the y-neighbour
+        # dist_graph (MPI_Neighbor_alltoall idiom)
         def pack(row):
             return np.stack([rho[:, row], p[:, row], v[:, row]])
 
-        out = {}
-        if rank > 0:
-            out[rank - 1] = pack(0)
-        if rank < n - 1:
-            out[rank + 1] = pack(-1)
+        nbrs = self.halo_graph[rank]
         halos = {}
-        if out:
-            halos = yield ("exchange", out, TAG_HALO)
+        if nbrs:
+            got = yield ("neighbor_alltoall",
+                         [pack(0) if q == rank - 1 else pack(-1)
+                          for q in nbrs], nbrs)
+            halos = dict(zip(nbrs, got))
 
         lo = halos.get(rank - 1)
         hi = halos.get(rank + 1)

@@ -35,8 +35,15 @@ Op vocabulary (generator yields):
     ("alltoall", chunks)                   -> [chunk_from_0..chunk_from_{n-1}]
     ("scan", value, redop)                 -> combine of v_0..v_rank (inclusive
                                               prefix reduction)
+    ("neighbor_allgather", value, nbrs)    -> [v_q for q in nbrs]
+    ("neighbor_alltoall", chunks, nbrs)    -> [chunk addressed to us by each
+                                              q in nbrs]
 
-``chunks`` is a length-n sequence indexed by destination rank.
+``chunks`` is a length-n sequence indexed by destination rank; for the
+neighborhood collectives it aligns with ``nbrs`` instead — the rank's MPI
+``dist_graph`` neighbor list (repro.topo.graph builds the common ones).
+The neighbor graph must be symmetric: every listed neighbor must list the
+rank back, or the collective deadlocks (exactly MPI's contract).
 """
 from __future__ import annotations
 
@@ -48,13 +55,15 @@ import numpy as np
 from repro.comm.transport import NOTHING, Endpoint, ReplicaTransport
 
 # reserved tag space for transport collectives (apps use tags >= 0;
-# repro.store uses -21..-24)
+# repro.store uses -21..-24, repro.topo.algorithms -31..-38)
 TAG_BCAST = -11
 TAG_GATHER = -12
 TAG_REDUCE_SCATTER = -13
 TAG_ALLTOALL = -14
 TAG_ALLGATHER = -15
 TAG_SCAN = -16
+TAG_NEIGHBOR_ALLGATHER = -17
+TAG_NEIGHBOR_ALLTOALL = -18
 
 _REDOPS = {"sum": np.add, "max": np.maximum, "min": np.minimum}
 
@@ -102,6 +111,15 @@ def reference_result(kind: str, votes: Dict[int, Any], rank: int, n: int,
         return [copy.deepcopy(votes[s][rank]) for s in range(n)]
     if kind == "scan":
         return combine(meta, [votes[s] for s in range(rank + 1)])
+    if kind == "neighbor_allgather":
+        # votes[src] = (value, neighbor list)
+        _value, nbrs = votes[rank]
+        return [copy.deepcopy(votes[q][0]) for q in nbrs]
+    if kind == "neighbor_alltoall":
+        # votes[src] = (chunks aligned with src's neighbor list, that list)
+        _chunks, nbrs = votes[rank]
+        return [copy.deepcopy(votes[q][0][list(votes[q][1]).index(rank)])
+                for q in nbrs]
     raise ValueError(f"unknown collective {kind!r}")
 
 
@@ -113,6 +131,13 @@ class CollectiveOp:
     """One collective's intake + resolution strategy."""
 
     kind: str = ""
+
+    def pending_heads(self) -> tuple:
+        """Heads of the pending descriptors this op resolves.  Switchboard
+        ops share the "collective" head (dispatched via the key's kind);
+        transport ops default to the ``<kind>_wait``/``<kind>_done``
+        convention and algorithm variants add their own."""
+        return (f"{self.kind}_wait", f"{self.kind}_done")
 
     def post(self, engine: "CollectiveEngine", ep: Endpoint, role: str,
              rank: int, op: tuple, step: int) -> tuple:
@@ -126,6 +151,9 @@ class CollectiveOp:
 class _SwitchboardOp(CollectiveOp):
     """Matches role-tagged contributions in the engine's table (no
     messages): the §5 role-aware completion rule with promotion fallback."""
+
+    def pending_heads(self):
+        return ()                            # shares the "collective" head
 
     def _key(self, engine, ep, op, step) -> tuple:
         idx = ep.op_index
@@ -357,19 +385,70 @@ class ScanOp(_TransportOp):
         return combine(redop, [got[s] for s in range(rank + 1)])
 
 
+class _NeighborOp(_TransportOp):
+    """Base for the MPI ``dist_graph`` neighborhood collectives: one send
+    to and one receive from every rank in the op-supplied neighbor list
+    (which must be symmetric across ranks — MPI's contract)."""
+
+    def _payload_for(self, op, i: int):
+        raise NotImplementedError
+
+    def post(self, engine, ep, role, rank, op, step):
+        nbrs = tuple(op[2])
+        if len(nbrs) != len(set(nbrs)) or rank in nbrs:
+            raise ValueError(f"{self.kind}: neighbor list must be unique "
+                             f"ranks excluding self, got {nbrs}")
+        for i, q in enumerate(nbrs):
+            self._send(engine, ep, role, q, self._payload_for(op, i), step)
+        return (f"{self.kind}_wait", nbrs, {})
+
+    def resolve(self, engine, ep, role, rank, pend):
+        _, nbrs, got = pend
+        for q in nbrs:
+            if q not in got:
+                m = engine.transport.match_recv(ep, q, self.tag)
+                if m is not None:
+                    got[q] = m.payload
+        if len(got) < len(nbrs):
+            return NOTHING
+        return [got[q] for q in nbrs]
+
+
+class NeighborAllgatherOp(_NeighborOp):
+    """("neighbor_allgather", value, nbrs): every neighbor receives this
+    rank's value; the result lists the neighbors' values in list order."""
+
+    kind = "neighbor_allgather"
+    tag = TAG_NEIGHBOR_ALLGATHER
+
+    def _payload_for(self, op, i):
+        return op[1]
+
+
+class NeighborAlltoallOp(_NeighborOp):
+    """("neighbor_alltoall", chunks, nbrs): chunks[i] goes to nbrs[i];
+    the result lists the chunk each neighbor addressed to this rank."""
+
+    kind = "neighbor_alltoall"
+    tag = TAG_NEIGHBOR_ALLTOALL
+
+    def post(self, engine, ep, role, rank, op, step):
+        if len(op[1]) != len(op[2]):
+            raise ValueError(
+                f"neighbor_alltoall needs one chunk per neighbor "
+                f"({len(op[2])}), got {len(op[1])}")
+        return super().post(engine, ep, role, rank, op, step)
+
+    def _payload_for(self, op, i):
+        return op[1][i]
+
+
 COLLECTIVE_OPS: Dict[str, CollectiveOp] = {
     op.kind: op for op in (AllreduceOp(), BarrierOp(), BcastOp(),
                            GatherOp(), ReduceScatterOp(), AlltoallOp(),
-                           AllgatherOp(), ScanOp())
+                           AllgatherOp(), ScanOp(),
+                           NeighborAllgatherOp(), NeighborAlltoallOp())
 }
-
-# pending-descriptor head -> handler; switchboard ops share the
-# "collective" head (the handler is recovered from the key's kind)
-_PENDING_OWNERS: Dict[str, Optional[CollectiveOp]] = {"collective": None}
-for _op in COLLECTIVE_OPS.values():
-    if not isinstance(_op, _SwitchboardOp):
-        for _head in (f"{_op.kind}_wait", f"{_op.kind}_done"):
-            _PENDING_OWNERS[_head] = _op
 
 
 class CollectiveEngine:
@@ -380,6 +459,15 @@ class CollectiveEngine:
         self.transport = transport
         self.ops = dict(COLLECTIVE_OPS if ops is None else ops)
         self.n = transport.n
+        # pending-descriptor head -> handler, built from THIS registry so
+        # algorithm variants (repro.topo.algorithms) resolve their own
+        # pendings; switchboard ops share the "collective" head (the
+        # handler is recovered from the key's kind)
+        self._pending_owners: Dict[str, Optional[CollectiveOp]] = \
+            {"collective": None}
+        for op in self.ops.values():
+            for head in op.pending_heads():
+                self._pending_owners[head] = op
         # switchboard state
         self.contrib: Dict[tuple, Dict] = {}
         self.combined: Dict[tuple, Any] = {}
@@ -422,7 +510,7 @@ class CollectiveEngine:
         return kind in self.ops
 
     def owns_pending(self, pend: tuple) -> bool:
-        return pend[0] in _PENDING_OWNERS
+        return pend[0] in self._pending_owners
 
     def post(self, ep: Endpoint, op: tuple, step: int) -> tuple:
         handler = self.ops.get(op[0])
@@ -433,7 +521,7 @@ class CollectiveEngine:
 
     def resolve(self, ep: Endpoint, pend: tuple):
         head = pend[0]
-        handler = _PENDING_OWNERS.get(head)
+        handler = self._pending_owners.get(head)
         if handler is None and head == "collective":
             handler = self.ops[pend[1][0]]
         if handler is None:
@@ -473,6 +561,10 @@ class ReferenceCollectives:
             key, meta = (kind, idx, root), root
         elif kind in ("allgather", "alltoall"):
             key, value, meta = (kind, idx), op[1], None
+        elif kind in ("neighbor_allgather", "neighbor_alltoall"):
+            # the vote carries (payload, neighbor list): reference_result
+            # reconstructs who addressed what to whom from the lists
+            key, value, meta = (kind, idx), (op[1], tuple(op[2])), None
         else:
             raise ValueError(f"unknown collective {kind!r}")
         if kind != "barrier":

@@ -25,7 +25,8 @@ import copy
 from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.core.message_log import LoggedMessage, ReceiverCursor, SenderLog
+from repro.core.message_log import (LoggedMessage, ReceiverCursor, SenderLog,
+                                    payload_nbytes)
 from repro.core.replica_map import ReplicaMap
 
 
@@ -69,7 +70,7 @@ class ReplicaTransport:
     """
 
     def __init__(self, rmap: ReplicaMap, n_ranks: int,
-                 log_limit_bytes: int = 1 << 28):
+                 log_limit_bytes: int = 1 << 28, cost_model=None):
         self.rmap = rmap
         self.n = n_ranks
         self.send_logs = {r: SenderLog(r, log_limit_bytes)
@@ -79,6 +80,15 @@ class ReplicaTransport:
             {r: [] for r in range(n_ranks)}
         self.endpoints: Dict[int, Endpoint] = {}
         self.duplicates_skipped = 0
+        # monotone delivery/consumption counter: multi-round collective
+        # schedules (repro.topo.algorithms) consume and forward messages
+        # inside a resolve that still returns NOTHING — schedulers watch
+        # this to tell that apart from a genuine deadlock
+        self.activity = 0
+        # per-message α‑β pricing (repro.topo.TopoCostModel or anything
+        # with msg_cost_workers); None keeps the transport cost-free
+        self.cost_model = cost_model
+        self.comm_time: Dict[int, float] = {}   # sender wid -> accrued s
 
     # ------------------------------------------------------------ lifecycle
 
@@ -102,12 +112,30 @@ class ReplicaTransport:
 
     def deliver(self, ep: Endpoint, msg: LoggedMessage) -> None:
         ep.inbox.append(msg)
+        self.activity += 1
+
+    def _charge(self, src_wid: int, dst_wid: int, nbytes: int) -> None:
+        """Accrue the priced cost of one physical message on the sender
+        (port model: the sender's NIC serializes its own messages; senders
+        run in parallel, so a step's comm time is the max over workers)."""
+        cost = self.cost_model.msg_cost_workers(src_wid, dst_wid, nbytes)
+        self.comm_time[src_wid] = self.comm_time.get(src_wid, 0.0) + cost
+
+    def take_comm_time(self) -> float:
+        """Max accrued per-worker comm time since the last take (0.0 with
+        no cost model); resets the accumulator."""
+        if not self.comm_time:
+            return 0.0
+        worst = max(self.comm_time.values())
+        self.comm_time.clear()
+        return worst
 
     def send(self, sender: Endpoint, dst_rank: int, tag: int, payload,
              step: int, *, log: bool) -> None:
         """Route one send per the paper's §5 parallel scheme."""
         role, src_rank = self.rmap.role_of(sender.wid)
         payload = copy.deepcopy(payload)
+        nbytes = payload_nbytes(payload) if self.cost_model is not None else 0
         stream = (src_rank, dst_rank, tag)
         sid = sender.send_counters.get(stream, 0)
         sender.send_counters[stream] = sid + 1
@@ -116,17 +144,25 @@ class ReplicaTransport:
                 self.send_logs[src_rank].record(dst_rank, tag, payload,
                                                 step, send_id=sid)
             msg = LoggedMessage(sid, src_rank, dst_rank, tag, payload, step)
-            self.deliver(self.endpoints[self.rmap.cmp[dst_rank]], msg)
+            dst_wid = self.rmap.cmp[dst_rank]
+            self.deliver(self.endpoints[dst_wid], msg)
+            if self.cost_model is not None:
+                self._charge(sender.wid, dst_wid, nbytes)
             # intercomm fill-in: destination replicated, source not
             if self.rmap.rep[dst_rank] is not None and \
                     self.rmap.rep[src_rank] is None:
-                self.deliver(self.endpoints[self.rmap.rep[dst_rank]],
-                             copy.deepcopy(msg))
+                rep_wid = self.rmap.rep[dst_rank]
+                self.deliver(self.endpoints[rep_wid], copy.deepcopy(msg))
+                if self.cost_model is not None:
+                    self._charge(sender.wid, rep_wid, nbytes)
         else:  # replica sender
             if self.rmap.rep[dst_rank] is not None:
                 msg = LoggedMessage(sid, src_rank, dst_rank, tag, payload,
                                     step)
-                self.deliver(self.endpoints[self.rmap.rep[dst_rank]], msg)
+                rep_wid = self.rmap.rep[dst_rank]
+                self.deliver(self.endpoints[rep_wid], msg)
+                if self.cost_model is not None:
+                    self._charge(sender.wid, rep_wid, nbytes)
             # else: skip (paper: no replica destination -> source replica
             # skips the send)
 
@@ -165,6 +201,7 @@ class ReplicaTransport:
                     self.duplicates_skipped += 1
                     return self._take(ep, src_rank, tag)
                 del ep.inbox[i]
+                self.activity += 1
                 return m
         return None
 

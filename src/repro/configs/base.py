@@ -195,6 +195,17 @@ class FTConfig:
     ckpt_backend: str = "disk"
     store_partners: int = 2
     store_bands: int = 4
+    # cluster topology + α‑β message pricing (repro.topo). None keeps the
+    # flat-constant cost model; "flat" | "fattree" | "dragonfly" |
+    # "torus3d" builds a TopoGraph over the runtime's nodes, prices every
+    # transport message at topo_alpha·hops + size/topo_beta +
+    # topo_gamma·size, and switches the collective registry to the
+    # MPICH-style tree/ring algorithm selection (threshold topo_small_msg).
+    topology: Optional[str] = None
+    topo_alpha: float = 100e-6           # s per hop
+    topo_beta: float = 12.5e9            # bytes/s per link
+    topo_gamma: float = 0.0              # s per byte processing overhead
+    topo_small_msg: int = 8192           # bytes; selection threshold
     weibull_shape: float = 0.7           # paper: matches real failure traces
     message_log_limit_bytes: int = 1 << 28
     max_failures: int = 0                # 0 -> unbounded

@@ -100,7 +100,7 @@ DEFAULT_NET_LATENCY_S = 100e-6
 def memstore_ckpt_cost(state_bytes: float, *, n_partners: int = 2,
                        net_bw_Bps: float = DEFAULT_NET_BW_BPS,
                        net_latency_s: float = DEFAULT_NET_LATENCY_S,
-                       n_messages: int = 8) -> float:
+                       n_messages: int = 8, topo=None) -> float:
     """Network-bound checkpoint cost C of the in-memory store.
 
     Each process pushes its ``state_bytes`` to ``n_partners`` partner
@@ -109,7 +109,15 @@ def memstore_ckpt_cost(state_bytes: float, *, n_partners: int = 2,
     partner copies over the NIC plus message latencies.  Unlike disk C it
     does NOT grow with the aggregate job size — that is what moves the
     combined-mode crossover to smaller process counts.
+
+    ``topo`` (a repro.topo.TopoCostModel) derives C from the topology's
+    α‑β estimator — hop-weighted latencies over the actual graph — in
+    place of the flat constants; on a flat graph with the default α/β the
+    two are identical.
     """
+    if topo is not None:
+        return topo.memstore_ckpt_cost(state_bytes, n_partners=n_partners,
+                                       n_messages=n_messages)
     if state_bytes < 0 or n_partners < 1 or net_bw_Bps <= 0:
         raise ValueError("need state_bytes >= 0, n_partners >= 1, bw > 0")
     return (n_partners * state_bytes / net_bw_Bps
@@ -118,18 +126,25 @@ def memstore_ckpt_cost(state_bytes: float, *, n_partners: int = 2,
 
 def memstore_restore_cost(state_bytes: float, *,
                           net_bw_Bps: float = DEFAULT_NET_BW_BPS,
-                          relaunch_s: float = 60.0) -> float:
+                          relaunch_s: float = 60.0, topo=None) -> float:
     """Pull the shards back from one surviving partner + job relaunch.
-    No parallel-filesystem reload: the dominant term is the relaunch."""
+    No parallel-filesystem reload: the dominant term is the relaunch.
+    ``topo`` delegates to the topology estimator (same flat-graph
+    equivalence as memstore_ckpt_cost)."""
+    if topo is not None:
+        return topo.memstore_restore_cost(state_bytes, relaunch_s=relaunch_s)
     if state_bytes < 0 or net_bw_Bps <= 0:
         raise ValueError("need state_bytes >= 0 and bw > 0")
     return state_bytes / net_bw_Bps + relaunch_s
 
 
-def combined_efficiency(job_mtbf_s: float, n_procs: int, ckpt_cost_s: float,
-                        restart_cost_s: float, *,
+def combined_efficiency(job_mtbf_s: float, n_procs: int,
+                        ckpt_cost_s: float = None,
+                        restart_cost_s: float = None, *,
                         repair_cost_s: float = 1.0,
-                        interval_s: float = 0.0) -> float:
+                        interval_s: float = 0.0,
+                        topo=None, state_bytes: float = None,
+                        relaunch_s: float = 60.0) -> float:
     """Useful fraction for the COMBINED mode on n_procs cores.
 
     Redundancy halves throughput (0.5).  Single-process failures cost only
@@ -137,7 +152,19 @@ def combined_efficiency(job_mtbf_s: float, n_procs: int, ckpt_cost_s: float,
     and are absorbed by checkpoint/restart with the Young-Daly interval
     tuned to that MTTI — so the combined mode's waste is governed by ITS
     backend's C (disk, or the memory store's network-bound C).
+
+    Pass ``topo`` (repro.topo.TopoCostModel) + ``state_bytes`` to derive
+    C and R from the topology estimators instead of hand-fed constants.
     """
+    if topo is not None and state_bytes is not None:
+        if ckpt_cost_s is None:
+            ckpt_cost_s = topo.memstore_ckpt_cost(state_bytes)
+        if restart_cost_s is None:
+            restart_cost_s = topo.memstore_restore_cost(
+                state_bytes, relaunch_s=relaunch_s)
+    if ckpt_cost_s is None or restart_cost_s is None:
+        raise ValueError("pass ckpt_cost_s/restart_cost_s, or topo + "
+                         "state_bytes to derive them")
     proc_mtbf = job_mtbf_s * n_procs
     mtti = replication_mtti(proc_mtbf, max(n_procs // 2, 1))
     repair_waste = min(repair_cost_s / job_mtbf_s, 1.0)
@@ -154,7 +181,9 @@ def combined_crossover_processes(base_procs: int, base_mtbf_s: float,
                                  repair_cost_s: float = 1.0,
                                  max_doublings: int = 12,
                                  steps_per_doubling: int = 8,
-                                 ckpt_growth: float = 1.6) -> int:
+                                 ckpt_growth: float = 1.6,
+                                 topo=None, state_bytes: float = None,
+                                 relaunch_s: float = 60.0) -> int:
     """Smallest process count where COMBINED-mode efficiency exceeds plain
     checkpoint/restart.
 
@@ -162,9 +191,17 @@ def combined_crossover_processes(base_procs: int, base_mtbf_s: float,
     per doubling, per the paper's Table 1); the combined mode pays its own
     backend's C: pass ``combined_ckpt_cost_s`` = the memory store's
     network-bound C (scale-free) for the diskless variant, or leave None to
-    share the disk C.  The scan is finer than doublings so nearby
-    crossovers of the two backends resolve to different counts.
+    share the disk C.  ``topo`` + ``state_bytes`` derive the combined C/R
+    from the topology estimators (hop-weighted α‑β over the graph), so the
+    crossover moves per topology.  The scan is finer than doublings so
+    nearby crossovers of the two backends resolve to different counts.
     """
+    if topo is not None and state_bytes is not None:
+        if combined_ckpt_cost_s is None:
+            combined_ckpt_cost_s = topo.memstore_ckpt_cost(state_bytes)
+        if combined_restart_cost_s is None:
+            combined_restart_cost_s = topo.memstore_restore_cost(
+                state_bytes, relaunch_s=relaunch_s)
     for i in range(max_doublings * steps_per_doubling + 1):
         factor = 2.0 ** (i / steps_per_doubling)
         p = int(round(base_procs * factor))

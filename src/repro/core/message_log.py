@@ -15,12 +15,37 @@ Logs are trimmed at checkpoint boundaries or when exceeding a memory limit
 """
 from __future__ import annotations
 
+import pickle
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
 Stream = Tuple[int, int, int]           # (src_rank, dst_rank, tag)
+
+
+def payload_nbytes(payload) -> int:
+    """Approximate wire size of a message payload.  Containers are summed
+    recursively (the tree/ring collective schedules wrap arrays in tuples
+    and dicts — counting those as a constant would let the sender-log
+    eviction cap miss almost all of their memory); opaque objects fall
+    back to their pickled length."""
+    if payload is None:
+        return 0
+    if isinstance(payload, np.ndarray):
+        return payload.nbytes
+    if isinstance(payload, (bytes, bytearray, memoryview)):
+        return len(payload)
+    if isinstance(payload, str):
+        return len(payload.encode())
+    if isinstance(payload, (bool, int, float, complex, np.generic)):
+        return 8
+    if isinstance(payload, (list, tuple, set, frozenset)):
+        return sum(payload_nbytes(x) for x in payload)
+    if isinstance(payload, dict):
+        return sum(payload_nbytes(k) + payload_nbytes(v)
+                   for k, v in payload.items())
+    return len(pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL))
 
 
 @dataclass
@@ -33,12 +58,7 @@ class LoggedMessage:
     step: int                            # application step when sent
 
     def nbytes(self) -> int:
-        p = self.payload
-        if isinstance(p, np.ndarray):
-            return p.nbytes
-        if isinstance(p, (bytes, bytearray)):
-            return len(p)
-        return 64
+        return payload_nbytes(self.payload)
 
 
 class SenderLog:

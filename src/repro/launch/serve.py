@@ -7,6 +7,13 @@ the computational slice fails mid-generation the replica's cache is CURRENT
 and failover costs one promotion (no prefill replay).  ReplicatedServer
 itself contains no replication or promotion logic anymore.
 
+Request batches reach the serving rank through ``BatchFanout``: a
+``ReplicaTransport`` bcast from an unreplicated frontend rank, so the
+computational copy arrives cmp→cmp and the replica copy over the §5
+intercomm fill-in — serving inherits the exact logging/replay/dedup path
+training messages use instead of relying on whole-app state copies to
+carry the batch to the replica.
+
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
       --batch 4 --prompt-len 32 --gen 16 --kill-at 8
@@ -21,10 +28,64 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import CollectiveEngine, NOTHING, ReplicaTransport
 from repro.configs import RunConfig, get_arch
 from repro.configs.base import FTConfig, ShapeConfig
+from repro.core.replica_map import ReplicaMap
 from repro.ft import DecodeWorkload, FTSession, StepKillInjector
 from repro.launch.step_fns import make_decode_step, make_prefill_step
+
+
+class BatchFanout:
+    """Routes each request batch over a ReplicaTransport bcast.
+
+    Two logical ranks: rank 0 is the serving rank (replicated when the
+    server replicates), rank 1 the unreplicated frontend holding the
+    batch.  A ``bcast`` rooted at the frontend delivers the batch cmp→cmp
+    to the serving computational worker and — because the destination is
+    replicated and the source is not — over the intercomm fill-in to the
+    replica worker, logged with send-IDs like any training message.  Both
+    received copies must be bitwise identical; the cmp copy feeds the
+    workload.
+    """
+
+    SERVE_RANK, FRONTEND_RANK = 0, 1
+
+    def __init__(self, replication: bool):
+        self.rmap = ReplicaMap(2, 1 if replication else 0)
+        self.transport = ReplicaTransport(self.rmap, 2)
+        self.engine = CollectiveEngine(self.transport)
+        self.eps = {w: self.transport.register(w) for w in self.rmap.alive()}
+        self.fanouts = 0
+
+    def fan_out(self, batch: np.ndarray) -> np.ndarray:
+        """One bcast round; returns the batch as received by the serving
+        computational worker."""
+        self.engine.begin_step()
+        step = self.fanouts
+        pend = {
+            w: self.engine.post(
+                ep,
+                ("bcast",
+                 batch if self.rmap.role_of(w)[1] == self.FRONTEND_RANK
+                 else None,
+                 self.FRONTEND_RANK),
+                step)
+            for w, ep in self.eps.items()}
+        got = {}
+        while len(got) < len(pend):
+            for w, ep in self.eps.items():
+                if w in got:
+                    continue
+                out = self.engine.resolve(ep, pend[w])
+                if out is not NOTHING:
+                    got[w] = out
+        cmp_w = self.rmap.cmp[self.SERVE_RANK]
+        rep_w = self.rmap.rep[self.SERVE_RANK]
+        if rep_w is not None:
+            np.testing.assert_array_equal(got[cmp_w], got[rep_w])
+        self.fanouts += 1
+        return got[cmp_w]
 
 
 class ReplicatedServer:
@@ -51,6 +112,7 @@ class ReplicatedServer:
         self.replication = replication
         self.batch = batch
         self.prompt_len = prompt_len
+        self.fanout = BatchFanout(replication)
         self.failures = 0
         self.promotions = 0
         self.last_report = None
@@ -87,8 +149,11 @@ class ReplicatedServer:
     def generate(self, prompt_tokens: np.ndarray, n_gen: int,
                  kill_at: int = -1) -> np.ndarray:
         """Greedy decode; kill_at k kills the computational slice after k
-        generated tokens (replication failover or abort)."""
+        generated tokens (replication failover or abort).  The batch
+        reaches the serving rank over the transport bcast (logged,
+        deduped), not by Python reference."""
         session = self.session(kill_at)
+        prompt_tokens = self.fanout.fan_out(np.asarray(prompt_tokens))
         try:
             rep = session.run(self.workload(prompt_tokens), n_gen)
         except RuntimeError:

@@ -15,6 +15,12 @@ and fires failure events.  Everything message-shaped lives in the layered
                            bcast/gather/reduce_scatter/alltoall),
   repro.comm.recovery    - failure-time drain + sender-log replay.
 
+With ``FTConfig.topology`` set, ``repro.topo`` prices every transport
+message (α·hops + size/β) into the new ``TimeBreakdown.comm`` component,
+the collective registry switches to tree/ring/recursive-doubling
+algorithm selection, and checkpoint/restore costs of the in-memory store
+are measured from the priced traffic instead of fed in as constants.
+
 Apps (repro.apps.*) write worker-local code:
 
     def step(self, rank, state, step_idx):
@@ -45,10 +51,14 @@ from repro.core.replica_map import ApplicationDead, ReplicaMap
 
 @dataclass
 class TimeBreakdown:
-    """Virtual-time components (the paper's Fig 9)."""
+    """Virtual-time components (the paper's Fig 9).  ``comm`` is the
+    α‑β-priced message time (repro.topo) — zero unless FTConfig.topology
+    is set, since the flat cost model folds communication into
+    step_time_s."""
 
     useful: float = 0.0
     redundant: float = 0.0          # replica share of compute
+    comm: float = 0.0               # topo-priced per-message time
     ckpt_write: float = 0.0
     restore: float = 0.0
     rollback: float = 0.0           # lost work re-executed after restart
@@ -57,11 +67,13 @@ class TimeBreakdown:
 
     @property
     def total(self) -> float:
-        return (self.useful + self.redundant + self.ckpt_write + self.restore
-                + self.rollback + self.repair + self.log_removal)
+        return (self.useful + self.redundant + self.comm + self.ckpt_write
+                + self.restore + self.rollback + self.repair
+                + self.log_removal)
 
     def as_dict(self) -> dict:
         return {"useful": self.useful, "redundant": self.redundant,
+                "comm": self.comm,
                 "ckpt_write": self.ckpt_write, "restore": self.restore,
                 "rollback": self.rollback, "repair": self.repair,
                 "log_removal": self.log_removal, "total": self.total}
@@ -161,10 +173,31 @@ class SimRuntime:
             injector if injector is not None else failure_events)
         self._injector_prepared = False
 
+        # cluster topology + α‑β message pricing (repro.topo): when
+        # FTConfig.topology names a graph, every transport message is
+        # priced, the collective registry switches to the MPICH-style
+        # tree/ring selection, and ckpt/restore costs are MEASURED from
+        # the store's priced traffic instead of fed in as constants
+        self.topo_graph = None
+        self.topo_costs = None
+        engine_ops = None
+        if getattr(ft, "topology", None):
+            from repro.topo import (SelectionPolicy, TopoCostModel,
+                                    make_topo_ops, make_topology)
+            self.topo_graph = make_topology(ft.topology,
+                                            self.topology.n_nodes)
+            self.topo_costs = TopoCostModel(
+                self.topo_graph, alpha_s=ft.topo_alpha,
+                beta_Bps=ft.topo_beta, gamma_s_per_B=ft.topo_gamma)
+            self.topo_costs.attach(self.topology)
+            engine_ops = make_topo_ops(
+                SelectionPolicy(small_msg_bytes=ft.topo_small_msg))
+
         # the layered comm subsystem (repro.comm)
         self.transport = ReplicaTransport(self.rmap, self.n,
-                                          ft.message_log_limit_bytes)
-        self.engine = CollectiveEngine(self.transport)
+                                          ft.message_log_limit_bytes,
+                                          cost_model=self.topo_costs)
+        self.engine = CollectiveEngine(self.transport, ops=engine_ops)
         # diskless checkpointing (repro.store): rank snapshots replicated
         # into partner memory over the same transport
         self.store = None
@@ -172,7 +205,8 @@ class SimRuntime:
             from repro.store import MemStore
             self.store = MemStore(self.transport, self.topology,
                                   k_partners=ft.store_partners,
-                                  n_bands=ft.store_bands)
+                                  n_bands=ft.store_bands,
+                                  graph=self.topo_graph)
         self.recovery = RecoveryManager(self.transport, store=self.store)
 
         self.workers: Dict[int, _Worker] = {}
@@ -225,11 +259,18 @@ class SimRuntime:
         snap = self._snapshot()
         self._ckpt_mem = snap
         self.last_ckpt_step = self.step_idx
+        topo_c = None
         if self.store is not None:
             # diskless: rank snapshots pushed to partner memory over the
             # transport (two-generation commit; previous gen retained on
-            # any mid-commit failure)
+            # any mid-commit failure).  With a topology configured, C is
+            # not a constant: it is the α‑β-priced time of the push
+            # traffic the save just generated.
+            if self.topo_costs is not None:
+                self.transport.take_comm_time()
             self.store.save(snap["step"], snap["ranks"])
+            if self.topo_costs is not None:
+                topo_c = self.transport.take_comm_time()
         elif self.ckpt_dir:
             for r, data in snap["ranks"].items():
                 with open(self._ckpt_path(r, baseline), "wb") as f:
@@ -238,8 +279,9 @@ class SimRuntime:
                 with open(os.path.join(self.ckpt_dir, "LATEST"), "w") as f:
                     f.write(str(snap["step"]))
         if not baseline:
-            self.result.time.ckpt_write += self._ckpt_c()
-            self.t += self._ckpt_c()
+            c = topo_c if topo_c is not None else self._ckpt_c()
+            self.result.time.ckpt_write += c
+            self.t += c
             # checkpoint boundary: trim message logs (log removal component)
             for log in self.transport.send_logs.values():
                 log.trim_before_step(self.step_idx)
@@ -266,6 +308,8 @@ class SimRuntime:
         self.topology = ClusterTopology(self.rmap.world_size,
                                         self.topology.workers_per_node)
         self.transport.rebind(self.rmap)
+        if self.topo_costs is not None:
+            self.topo_costs.attach(self.topology)
         self.engine.world_changed()
         self.workers = {}
         for w in self.rmap.alive():
@@ -277,10 +321,18 @@ class SimRuntime:
             # partner memory through the rebuilt world's endpoints
             from repro.store import StoreUnrecoverable
             self.store.rebind(topology=self.topology)
+            if self.topo_costs is not None:
+                self.transport.take_comm_time()
             try:
                 ranks, step = self.store.restore()
                 snap = {"step": step, "ranks": ranks}
                 self.result.store_restores += 1
+                if self.topo_costs is not None:
+                    # topo-priced restore: the fetch/reply traffic the
+                    # pull just generated, plus the configured relaunch
+                    # surcharge (restore_cost_s doubles as that floor)
+                    restore_c = self.transport.take_comm_time() \
+                        + self.costs.restore_cost_s
             except StoreUnrecoverable:
                 # beyond the placement's tolerance: fall back to the
                 # harness's coordinated snapshot (counted, not hidden)
@@ -359,6 +411,7 @@ class SimRuntime:
 
         while True:
             progressed = False
+            activity0 = self.transport.activity
             alive = list(self.workers.items())
             for w, worker in alive:
                 if w not in self.workers or worker.done:
@@ -389,12 +442,23 @@ class SimRuntime:
             live = [x for x in self.workers.values()]
             if all(x.done for x in live):
                 break
-            if not progressed:
+            if not progressed and self.transport.activity == activity0:
+                # no generator advanced AND no message moved: a resolve
+                # that consumes/forwards mid-schedule (tree/ring rounds)
+                # counts as progress even while still blocked
                 blocked = {x.wid: x.pending for x in live if not x.done}
                 raise RuntimeError(f"deadlock at step {self.step_idx}: "
                                    f"{blocked}")
 
         self.t = step_end
+        if self.topo_costs is not None:
+            # α‑β-priced message time of this step (max over workers:
+            # senders serialize on their own port, workers run in
+            # parallel) — a NEW virtual-time component the flat model
+            # folded into step_time_s
+            comm = self.transport.take_comm_time()
+            self.result.time.comm += comm
+            self.t += comm
         if self.step_idx < self.max_step_done:
             # re-executing work lost to a rollback (paper Fig 9 'rollback')
             self.result.time.rollback += self.costs.step_time_s

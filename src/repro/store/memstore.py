@@ -8,10 +8,12 @@ intercomm fill-in and send-ID dedup):
     into ``n_bands`` shards, retains the shard set in its OWN workers'
     memory (a local memcpy — ReStore keeps the checkpoint at the owner and
     redundantly at partners, so a coordinated rollback does not need the
-    network for surviving ranks), and pushes every shard to each of its k
-    placement partners — from its computational endpoint AND its replica
-    endpoint, so both copies of a partner end up holding the shards and a
-    later promotion loses nothing;
+    network for surviving ranks), and pushes the whole band set to each of
+    its k placement partners in ONE batched message per partner (the
+    per-band CRCs ride inside the payload; the α‑priced transport makes
+    per-band messages pure latency waste) — from its computational
+    endpoint AND its replica endpoint, so both copies of a partner end up
+    holding the shards and a later promotion loses nothing;
   * ``pump``: partner workers consume the pushes into their per-worker
     stores and ack each complete (owner, generation) shard set back to the
     owner;
@@ -78,13 +80,14 @@ class MemStore:
     """Replicated in-memory checkpoint store over a ReplicaTransport."""
 
     def __init__(self, transport, topology, *, k_partners: int = 2,
-                 n_bands: int = 4):
+                 n_bands: int = 4, graph=None):
         self.transport = transport
         self.topology = topology
         self.k = k_partners
         self.n_bands = n_bands
+        self.graph = graph            # topo graph: wider failure domains
         self.placement = PartnerPlacement(transport.rmap, topology,
-                                          k_partners)
+                                          k_partners, graph=graph)
         # per-worker shard memory: worker id -> {(owner, gen): _ShardSet}
         self.stores: Dict[int, Dict[Tuple[int, int], _ShardSet]] = {}
         # generation metadata (shared bookkeeping standing in for what every
@@ -112,7 +115,7 @@ class MemStore:
         if topology is not None:
             self.topology = topology
         self.placement = PartnerPlacement(self.transport.rmap, self.topology,
-                                          self.k)
+                                          self.k, graph=self.graph)
 
     def lose_worker(self, worker: int) -> None:
         """The worker's memory is gone: its shard copies with it."""
@@ -187,11 +190,15 @@ class MemStore:
                 self.stores.setdefault(w, {})[(r, gen)] = ss
             for ep in self._rank_endpoints(r):
                 for p in expected:
-                    for b, chunk in enumerate(chunks):
-                        self._send(ep, p, TAG_PUSH,
-                                   ("push", r, gen, b, self.n_bands, step,
-                                    len(blob), crcs, chunk), step)
-                        self.pushes += 1
+                    # all bands for one partner ride in ONE message (the
+                    # transport prices per-message α, so fragmenting a
+                    # push into n_bands messages would pay n_bands hops
+                    # of latency for no durability gain); the per-band
+                    # CRCs travel inside the batched payload
+                    self._send(ep, p, TAG_PUSH,
+                               ("push", r, gen, step, len(blob), crcs,
+                                chunks), step)
+                    self.pushes += 1
         self.last_save_bytes = total
         self.gens[gen] = {"step": step, "owners": owners,
                           "acks": set(), "complete": False}
@@ -212,12 +219,13 @@ class MemStore:
                 continue
             ws = self.stores.setdefault(w, {})
             for m in self._drain(ep, TAG_PUSH):
-                _, r, gen, b, n_bands, step, nbytes, crcs, chunk = m.payload
+                _, r, gen, step, nbytes, crcs, chunks = m.payload
                 key = (r, gen)
                 ss = ws.get(key)
                 if ss is None:
-                    ss = ws[key] = _ShardSet(step, n_bands, nbytes, crcs)
-                ss.add(b, chunk)
+                    ss = ws[key] = _ShardSet(step, len(chunks), nbytes, crcs)
+                for b, chunk in enumerate(chunks):
+                    ss.add(b, chunk)
                 if ss.complete() and self._rank_reachable(r):
                     self._send(ep, r, TAG_ACK, ("ack", r, gen, my_rank), step)
         # owner ack intake (both role endpoints; acks are per partner rank)

@@ -37,16 +37,27 @@ class PlacementError(ValueError):
 
 
 class PartnerPlacement:
-    def __init__(self, rmap, topology, k_partners: int = 2):
+    """``graph`` (a repro.topo.TopoGraph) widens the failure domain from
+    the node to the infrastructure unit the node dies with — a fat-tree
+    edge switch, a dragonfly group — so shards also avoid sharing a
+    switch/group with their owner, not just a node."""
+
+    def __init__(self, rmap, topology, k_partners: int = 2, graph=None):
         if k_partners < 1:
             raise PlacementError("need at least one partner per rank")
         self.rmap = rmap
         self.topology = topology
+        self.graph = graph
         self.k = k_partners
         self.degraded = False
         self._partners: Dict[int, Tuple[int, ...]] = {}
         for r in range(rmap.n):
             self._partners[r] = self._pick(r)
+
+    def _domain_of_node(self, node: int) -> int:
+        if self.graph is None:
+            return node
+        return self.graph.failure_domain(node % self.graph.n_nodes)
 
     # -- queries -------------------------------------------------------------
 
@@ -54,12 +65,14 @@ class PartnerPlacement:
         return self._partners[rank]
 
     def domain(self, rank: int) -> FrozenSet[int]:
-        """Nodes hosting this rank's live copies (cmp + replica)."""
-        nodes = set()
+        """Failure domains hosting this rank's live copies (cmp +
+        replica): the nodes themselves, or the graph's infrastructure
+        units (edge switch, dragonfly group) when a topo graph is set."""
+        domains = set()
         for w in (self.rmap.cmp.get(rank), self.rmap.rep.get(rank)):
             if w is not None and w not in self.rmap.dead:
-                nodes.add(self.topology.node_of(w))
-        return frozenset(nodes)
+                domains.add(self._domain_of_node(self.topology.node_of(w)))
+        return frozenset(domains)
 
     def holders_of(self, rank: int) -> List[int]:
         """Live workers holding a copy of this rank's shards (the partner

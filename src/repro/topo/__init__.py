@@ -1,0 +1,39 @@
+"""repro.topo — cluster topology + α‑β communication cost subsystem.
+
+Until now the simulator charged flat per-step constants for every
+message; this package models the cluster as a graph and prices each one,
+so bandwidth effects (and the checkpoint-vs-replication crossovers built
+on them) emerge from the model instead of being fed in:
+
+  graph       - flat / fat-tree / dragonfly / 3-D-torus topologies:
+                hop distances, link paths for contention, node→failure-
+                domain mapping (reused by store.placement), and the
+                dist_graph neighbor lists the neighborhood collectives
+                take;
+  costs       - TopoCostModel: α·hops + size/β (+ γ·size) per message,
+                contended round pricing, closed-form estimators for every
+                collective algorithm, and the in-memory store's C and R
+                (ckpt_policy delegates here when a topology is set);
+  algorithms  - binomial-tree bcast/gather, ring allgather/reduce_scatter/
+                allreduce and recursive-doubling allreduce/allgather as
+                p2p schedules over ReplicaTransport (inheriting logging /
+                replay / dedup), with an MPICH-style SelectionPolicy and
+                make_topo_ops() registry for CollectiveEngine.
+
+Configured through FTConfig.topology / topo_alpha / topo_beta /
+topo_gamma / topo_small_msg; SimRuntime wires it end to end.  See
+docs/topo_api.md for the contracts.
+"""
+from repro.topo.algorithms import (SelectingOp, SelectionPolicy,
+                                   make_topo_ops)
+from repro.topo.costs import COLLECTIVE_ALGOS, TopoCostModel
+from repro.topo.graph import (DragonflyTopology, FatTreeTopology,
+                              FlatTopology, TopoGraph, Torus3DTopology,
+                              line_neighbors, make_topology, ring_neighbors)
+
+__all__ = [
+    "TopoGraph", "FlatTopology", "FatTreeTopology", "DragonflyTopology",
+    "Torus3DTopology", "make_topology", "line_neighbors", "ring_neighbors",
+    "TopoCostModel", "COLLECTIVE_ALGOS",
+    "SelectionPolicy", "SelectingOp", "make_topo_ops",
+]

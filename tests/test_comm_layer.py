@@ -1,8 +1,11 @@
 """The repro.comm layer: every collective (allreduce/barrier/bcast/gather/
-allgather/reduce_scatter/alltoall/scan) against a straight-line numpy
+allgather/reduce_scatter/alltoall/scan + the neighbor_allgather/
+neighbor_alltoall dist_graph collectives) against a straight-line numpy
 reference, with and without replication, exactly-once delivery across
 mid-collective kills, and MPI_ANY_SOURCE wildcard forwarding (which
-repro.apps no longer exercises since PIC moved to alltoall)."""
+repro.apps no longer exercises since PIC moved to alltoall).
+tests/test_topo.py reruns the same CollectiveZoo under the topology-
+selected tree/ring algorithm registry."""
 import numpy as np
 import pytest
 
@@ -11,6 +14,7 @@ from repro.configs.base import FTConfig
 from repro.core.failure_sim import FailureEvent
 from repro.ft.workload import SimAppWorkload
 from repro.simrt import CostModel, SimRuntime
+from repro.topo import ring_neighbors
 
 SHAPES = [(), (5,), (3, 4)]
 
@@ -26,19 +30,22 @@ class CollectiveZoo:
     """One step = one round of every collective; results fold into the
     rank state so any protocol error shows up in the final comparison."""
 
+    KEYS = ("sum", "max", "bcast", "gather", "rs", "a2a", "ag", "scan",
+            "na", "nt")
+
     def __init__(self, n_ranks: int, shape=(5,)):
         self.n_ranks = n_ranks
         self.shape = shape
+        self.nbrs = ring_neighbors(n_ranks)
 
     def init_state(self, rank: int) -> dict:
-        return {k: np.zeros(self.shape)
-                for k in ("sum", "max", "bcast", "gather", "rs", "a2a",
-                          "ag", "scan")}
+        return {k: np.zeros(self.shape) for k in self.KEYS}
 
     def step(self, rank, state, t):
         n = self.n_ranks
         root = t % n
         v = pay(rank, t, self.shape)
+        nbrs = self.nbrs[rank]
         # transport collectives first: their point-to-point messages are in
         # flight at the pass boundary where failure events fire, so kills
         # land mid-collective with real traffic to drain and replay
@@ -48,16 +55,21 @@ class CollectiveZoo:
         rs = yield ("reduce_scatter", [v + d for d in range(n)], "sum")
         a2a = yield ("alltoall", [v * (d + 1) for d in range(n)])
         sc = yield ("scan", v * 0.5, "sum")
+        na = yield ("neighbor_allgather", v + 3.0, nbrs)
+        nt = yield ("neighbor_alltoall", [v * (q + 2) for q in nbrs], nbrs)
         s = yield ("allreduce", v, "sum")
         m = yield ("allreduce", v, "max")
         yield ("barrier",)
         g_fold = np.add.reduce(np.stack(g), axis=0) if g is not None else 0.0
         ag_fold = np.add.reduce(np.stack(ag), axis=0)
         a2a_fold = np.add.reduce(np.stack(a2a), axis=0)
+        na_fold = np.add.reduce(np.stack(na), axis=0)
+        nt_fold = np.add.reduce(np.stack(nt), axis=0)
         return {"sum": state["sum"] + s, "max": state["max"] + m,
                 "bcast": state["bcast"] + b, "gather": state["gather"] + g_fold,
                 "rs": state["rs"] + rs, "a2a": state["a2a"] + a2a_fold,
-                "ag": state["ag"] + ag_fold, "scan": state["scan"] + sc}
+                "ag": state["ag"] + ag_fold, "scan": state["scan"] + sc,
+                "na": state["na"] + na_fold, "nt": state["nt"] + nt_fold}
 
     def check(self, states) -> float:
         return float(sum(float(np.sum(a)) for s in states.values()
@@ -66,10 +78,9 @@ class CollectiveZoo:
 
 def zoo_reference(n: int, shape, steps: int):
     """Straight-line numpy re-derivation of CollectiveZoo's final state."""
-    states = {r: {k: np.zeros(shape) for k in
-                  ("sum", "max", "bcast", "gather", "rs", "a2a",
-                   "ag", "scan")}
+    states = {r: {k: np.zeros(shape) for k in CollectiveZoo.KEYS}
               for r in range(n)}
+    nbrs = ring_neighbors(n)
     for t in range(steps):
         root = t % n
         vs = {r: pay(r, t, shape) for r in range(n)}
@@ -92,6 +103,10 @@ def zoo_reference(n: int, shape, steps: int):
             for s in range(1, r + 1):
                 scan_r = scan_r + vs[s] * 0.5
             states[r]["scan"] = states[r]["scan"] + scan_r
+            states[r]["na"] = states[r]["na"] + np.sum(
+                np.stack([vs[q] + 3.0 for q in nbrs[r]]), axis=0)
+            states[r]["nt"] = states[r]["nt"] + np.sum(
+                np.stack([vs[q] * (r + 2) for q in nbrs[r]]), axis=0)
     return states
 
 

@@ -167,6 +167,34 @@ def test_more_than_k_domain_deaths_is_unrecoverable():
         store.restore()
 
 
+def test_push_batches_bands_per_partner():
+    """All of a rank's bands for one partner ride in ONE message: the
+    per-message α of the topo-priced transport makes band-per-message
+    pushes pure latency waste.  Message count per save drops from
+    endpoints x partners x bands to endpoints x partners."""
+    n, k, bands = 4, 2, 3
+    _rmap, _topo, _t, store = build_world(n, n, 2, k=k, bands=bands)
+    want = rank_states(n, seed=13)
+    store.save(5, want)
+    endpoints_per_rank = 2                           # cmp + rep
+    assert store.pushes == n * endpoints_per_rank * k
+    assert store.pushes < n * endpoints_per_rank * k * bands
+    # the batched payload still carries every band + its CRC: a pair
+    # death restores bitwise
+    victims = [0, n]
+    rmap = store.transport.rmap
+    try:
+        rmap.fail_many(victims)
+    except ApplicationDead:
+        pass
+    for w in victims:
+        store.lose_worker(w)
+    respawn_world(store, _topo, n)
+    got, step = store.restore()
+    assert step == 5
+    assert_states_bitwise(got, want)
+
+
 # ------------------------------------------------- two-generation commit
 
 def test_mid_commit_death_restores_previous_generation_bitwise():

@@ -1,0 +1,407 @@
+"""repro.topo: graph invariants, α‑β cost estimators (monotonicity +
+flat-graph reduction to the pre-topo constants), the MPICH-style selection
+policy, tree/ring/recursive-doubling algorithms bitwise against the zoo
+reference with no/partial/full replication and worker/node/pair kills
+mid-schedule, topo-derived checkpoint/restore costs in SimRuntime, the
+graph-widened store placement, and the serving batch fan-out."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from test_comm_layer import (CollectiveZoo, assert_states_equal, pay,
+                             zoo_reference)
+
+from repro.configs.base import FTConfig
+from repro.core import ckpt_policy
+from repro.core.coordinator import ClusterTopology
+from repro.core.failure_sim import FailureEvent
+from repro.core.replica_map import ReplicaMap
+from repro.simrt import CostModel, SimRuntime
+from repro.store import PartnerPlacement
+from repro.topo import (COLLECTIVE_ALGOS, SelectionPolicy, TopoCostModel,
+                        line_neighbors, make_topo_ops, make_topology,
+                        ring_neighbors)
+
+TOPOLOGIES = ("flat", "fattree", "dragonfly", "torus3d")
+
+
+# ---------------------------------------------------------------- graphs
+
+@given(name=st.sampled_from(TOPOLOGIES), n=st.integers(1, 40))
+@settings(max_examples=40, deadline=None)
+def test_graph_invariants(name, n):
+    g = make_topology(name, n)
+    assert g.n_nodes == n
+    for a in range(min(n, 12)):
+        assert g.hops(a, a) == 0
+        assert g.links_on_path(a, a) == ()
+        assert g.failure_domain(a) >= 0
+        for b in range(min(n, 12)):
+            assert g.hops(a, b) == g.hops(b, a) >= (0 if a == b else 1)
+            if a != b:
+                assert g.links_on_path(a, b)
+    if n >= 2:
+        assert g.avg_hops() >= 1.0
+        assert g.neighbor_hops() >= 1.0
+    # neighbor lists are symmetric and in range
+    for a in range(min(n, 12)):
+        for q in g.neighbors(a):
+            assert 0 <= q < n and q != a
+            assert a in g.neighbors(q)
+
+
+def test_torus_links_match_hops():
+    g = make_topology("torus3d", 27)
+    assert g.dims == (3, 3, 3)
+    for a in range(27):
+        for b in range(27):
+            assert len(g.links_on_path(a, b)) == g.hops(a, b)
+
+
+def test_failure_domains_follow_infrastructure():
+    ft = make_topology("fattree", 16, radix=4)
+    assert ft.failure_domain(0) == ft.failure_domain(3)
+    assert ft.failure_domain(0) != ft.failure_domain(4)
+    df = make_topology("dragonfly", 16, group_size=4)
+    assert df.failure_domain(0) == df.failure_domain(3)
+    assert df.failure_domain(0) != df.failure_domain(4)
+    # flat / torus: a node dies alone
+    for name in ("flat", "torus3d"):
+        g = make_topology(name, 8)
+        assert len({g.failure_domain(x) for x in range(8)}) == 8
+
+
+def test_unknown_topology_rejected():
+    with pytest.raises(ValueError):
+        make_topology("hypercube", 8)
+
+
+def test_dist_graph_neighbor_lists():
+    assert line_neighbors(4) == [[1], [0, 2], [1, 3], [2]]
+    assert ring_neighbors(4) == [[1, 3], [0, 2], [1, 3], [0, 2]]
+    assert ring_neighbors(2) == [[1], [0]]
+    assert ring_neighbors(1) == [[]]
+
+
+# ----------------------------------------------------------------- costs
+
+@given(name=st.sampled_from(TOPOLOGIES),
+       n=st.sampled_from([2, 4, 8, 64, 512]),
+       nbytes=st.sampled_from([64, 8192, 1 << 20]))
+@settings(max_examples=60, deadline=None)
+def test_estimators_monotone_in_size_and_n(name, n, nbytes):
+    cm = TopoCostModel(make_topology(name, max(n, 2)))
+    big = TopoCostModel(make_topology(name, 4 * n))
+    for kind, algos in COLLECTIVE_ALGOS.items():
+        for algo in algos:
+            t = cm.collective_time(kind, algo, n, nbytes)
+            assert t > 0
+            # monotone in message size
+            assert cm.collective_time(kind, algo, n, 2 * nbytes) > t
+            # monotone in world size (same graph scaled with the world)
+            assert big.collective_time(kind, algo, 4 * n, nbytes) > t
+
+
+def test_flat_topology_reduces_to_old_constants():
+    """The α‑β estimators on a flat graph with the default α/β ARE the
+    pre-topo ckpt_policy constants — new model, same baseline."""
+    cm = TopoCostModel(make_topology("flat", 8))
+    for s in (0.0, 1.4e9, 3.3e7):
+        assert cm.memstore_ckpt_cost(s, n_partners=2, n_messages=8) == \
+            pytest.approx(ckpt_policy.memstore_ckpt_cost(
+                s, n_partners=2, n_messages=8), rel=1e-12)
+        assert cm.memstore_restore_cost(s, relaunch_s=60.0) == \
+            pytest.approx(ckpt_policy.memstore_restore_cost(
+                s, relaunch_s=60.0), rel=1e-12)
+    # and the ckpt_policy topo= hooks delegate to exactly these numbers
+    assert ckpt_policy.memstore_ckpt_cost(1.4e9, n_messages=4, topo=cm) == \
+        cm.memstore_ckpt_cost(1.4e9, n_messages=4)
+    assert ckpt_policy.memstore_restore_cost(1.4e9, topo=cm) == \
+        cm.memstore_restore_cost(1.4e9)
+
+
+def test_tree_ring_beat_dense_at_scale():
+    """The acceptance shape of fig15: dense-exchange virtual time diverges
+    from tree/ring as N grows; at N >= 1024 tree bcast and ring allreduce
+    are asymptotically cheaper on every topology."""
+    s = 1 << 26
+    for name in TOPOLOGIES:
+        prev_ratio = 0.0
+        for n in (64, 256, 1024, 4096):
+            cm = TopoCostModel(make_topology(name, n))
+            dense_b = cm.collective_time("bcast", "dense", n, s)
+            tree_b = cm.collective_time("bcast", "tree", n, s)
+            dense_a = cm.collective_time("allreduce", "dense", n, s)
+            ring_a = cm.collective_time("allreduce", "ring", n, s)
+            ratio = dense_b / tree_b
+            assert ratio > prev_ratio          # the gap widens with N
+            prev_ratio = ratio
+            if n >= 1024:
+                assert tree_b < dense_b / 10
+                assert ring_a < dense_a / 10
+
+
+def test_round_time_accounts_for_contention():
+    cm = TopoCostModel(make_topology("fattree", 16, radix=8,
+                                     oversubscription=4.0))
+    one = cm.round_time([(0, 8, 1 << 20)])
+    # eight cross-switch flows share the two up-links
+    many = cm.round_time([(i, 8 + i, 1 << 20) for i in range(8)])
+    assert many > 4 * one
+    flat = TopoCostModel(make_topology("flat", 16))
+    # a flat crossbar only contends on host links
+    assert flat.round_time([(i, 8 + i, 1 << 20) for i in range(8)]) == \
+        pytest.approx(flat.round_time([(0, 8, 1 << 20)]))
+
+
+def test_combined_crossover_from_topo_estimators():
+    """ckpt_policy derives the combined mode's C and R from the topology
+    instead of hand-fed constants; a pricier graph -> later crossover."""
+    r_disk = 46.0 + 1000.0
+    crossings = {}
+    for name, kw in (("flat", {}),
+                     ("fattree", {"radix": 8, "oversubscription": 4.0})):
+        cm = TopoCostModel(make_topology(name, 512), alpha_s=5e-3)
+        crossings[name] = ckpt_policy.combined_crossover_processes(
+            1024, 16000.0, 46.0, restart_cost_s=r_disk,
+            topo=cm, state_bytes=1.4e9)
+        assert crossings[name] > 0
+    assert crossings["flat"] <= crossings["fattree"]
+    eff = ckpt_policy.combined_efficiency(
+        2000.0, 8192, topo=TopoCostModel(make_topology("flat", 512)),
+        state_bytes=1.4e9)
+    assert 0.0 < eff < 0.5
+    with pytest.raises(ValueError):
+        ckpt_policy.combined_efficiency(2000.0, 8192)
+
+
+# ------------------------------------------------------- selection policy
+
+def test_selection_policy_table():
+    pol = SelectionPolicy(small_msg_bytes=8192)
+    big = np.zeros(4096)                          # 32 KiB
+    small = np.zeros(4)
+    assert pol.choose("bcast", 8, ("bcast", big, 0)) == "tree"
+    assert pol.choose("bcast", 2, ("bcast", big, 0)) == "dense"
+    assert pol.choose("gather", 8, ("gather", big, 0)) == "tree"
+    assert pol.choose("allgather", 8, ("allgather", small)) == "rd"
+    assert pol.choose("allgather", 8, ("allgather", big)) == "ring"
+    assert pol.choose("allgather", 6, ("allgather", big)) == "ring"
+    assert pol.choose("allreduce", 8, ("allreduce", big, "sum")) == "ring"
+    assert pol.choose("allreduce", 8, ("allreduce", small, "sum")) == "rd"
+    assert pol.choose("allreduce", 6,
+                      ("allreduce", small, "sum")) == "switchboard"
+    assert pol.choose("allreduce", 8,
+                      ("allreduce", np.float64(1.0), "sum")) == "rd"
+    assert pol.choose("reduce_scatter", 8,
+                      ("reduce_scatter", [big] * 8, "sum")) == "ring"
+    assert pol.choose("reduce_scatter", 8,
+                      ("reduce_scatter", [small] * 8, "sum")) == "dense"
+    assert pol.choose("alltoall", 8, ("alltoall", [big] * 8)) == "dense"
+
+
+def test_make_topo_ops_registry_covers_defaults():
+    ops = make_topo_ops()
+    from repro.comm import COLLECTIVE_OPS
+    assert set(ops) == set(COLLECTIVE_OPS)
+
+
+# ----------------------------------------- algorithms: bitwise + failures
+
+def run_zoo_topo(topology, small, events=(), mode="replication", rep=1.0,
+                 n=4, shape=(5,), steps=6, tmpdir=None):
+    app = CollectiveZoo(n, shape)
+    ft = FTConfig(mode=mode, replication_degree=rep, mtbf_s=1e9,
+                  ckpt_interval_s=3.0, topology=topology,
+                  topo_small_msg=small)
+    rt = SimRuntime(app, ft,
+                    costs=CostModel(step_time_s=1.0, ckpt_cost_s=0.1,
+                                    restore_cost_s=0.1),
+                    ckpt_dir=tmpdir, failure_events=list(events),
+                    workers_per_node=2)
+    return rt, rt.run(steps)
+
+
+@pytest.mark.parametrize("topology", ["flat", "fattree", "torus3d"])
+@pytest.mark.parametrize("small", [0, 8192])
+@pytest.mark.parametrize("n", [2, 4, 5])
+def test_topo_collectives_match_reference(topology, small, n):
+    """Every selected algorithm (tree/ring at small=0, recursive doubling
+    at the default threshold for pow2 worlds, dense/switchboard for tiny
+    worlds) is bitwise-identical to the straight-line reference, with and
+    without replication."""
+    for mode, rep in (("none", 1.0), ("replication", 1.0)):
+        rt, res = run_zoo_topo(topology, small, mode=mode, rep=rep, n=n)
+        assert_states_equal(res.states, zoo_reference(n, (5,), 6))
+        assert res.time.comm > 0
+        assert res.time.comm == pytest.approx(rt.t - res.time.useful)
+
+
+def test_topo_partial_replication_bitwise(tmp_path):
+    _rt, clean = run_zoo_topo("fattree", 0, mode="combined", rep=0.5,
+                              tmpdir=str(tmp_path / "clean"))
+    ev = [FailureEvent(1.5, (1,)), FailureEvent(3.5, (3,))]
+    _rt, faulty = run_zoo_topo("fattree", 0, ev, mode="combined", rep=0.5,
+                               tmpdir=str(tmp_path / "faulty"))
+    assert faulty.promotions == 1 and faulty.restarts == 1
+    assert_states_equal(faulty.states, clean.states)
+
+
+@pytest.mark.parametrize("topology", ["fattree", "torus3d"])
+@pytest.mark.parametrize("small", [0, 8192])
+def test_topo_kills_mid_schedule_exact(topology, small, tmp_path):
+    """Worker, node and pair-death kills landing mid tree/ring schedule:
+    promotion + drain + replay + dedup keep every answer bitwise."""
+    ev = [FailureEvent(1.5, (0,)), FailureEvent(3.5, (2,)),
+          FailureEvent(4.5, (5,))]
+    _rt, faulty = run_zoo_topo(topology, small, ev)
+    assert faulty.promotions == 2 and faulty.restarts == 0
+    assert_states_equal(faulty.states, zoo_reference(4, (5,), 6))
+
+    _rt, faulty = run_zoo_topo(topology, small, [FailureEvent(2.5, (0, 1))])
+    assert faulty.promotions == 2
+    assert_states_equal(faulty.states, zoo_reference(4, (5,), 6))
+
+    _rt, clean = run_zoo_topo(topology, small, mode="combined",
+                              tmpdir=str(tmp_path / "c"))
+    ev = [FailureEvent(2.2, (1,)), FailureEvent(4.3, (5,))]
+    _rt, faulty = run_zoo_topo(topology, small, ev, mode="combined",
+                               tmpdir=str(tmp_path / "f"))
+    assert faulty.restarts == 1 and faulty.promotions >= 1
+    assert_states_equal(faulty.states, clean.states)
+
+
+class RingFirstApp:
+    """First op is a large-message allreduce: with topo_small_msg=0 the
+    ring schedule's initial chunk sends are in flight at the pass boundary
+    where kills fire, so drain + sender-log replay is exercised."""
+
+    def __init__(self, n_ranks):
+        self.n_ranks = n_ranks
+
+    def init_state(self, rank):
+        return {"acc": np.zeros(8)}
+
+    def step(self, rank, state, t):
+        v = (np.arange(8, dtype=np.float64) + 1) * (rank + 1) * (t + 2) * 0.5
+        s = yield ("allreduce", v, "sum")
+        g = yield ("allgather", v * 2.0)
+        return {"acc": state["acc"] + s
+                + np.add.reduce(np.stack(g), axis=0)}
+
+    def check(self, states):
+        return float(sum(s["acc"].sum() for s in states.values()))
+
+
+def test_mid_ring_kill_replays_in_flight_chunks():
+    def run(events=()):
+        ft = FTConfig(mode="replication", replication_degree=1.0,
+                      mtbf_s=1e9, topology="fattree", topo_small_msg=0)
+        rt = SimRuntime(RingFirstApp(4), ft,
+                        costs=CostModel(step_time_s=1.0),
+                        failure_events=list(events), workers_per_node=2)
+        return rt.run(5)
+
+    clean = run()
+    faulty = run([FailureEvent(1.5, (1,)), FailureEvent(3.5, (2,))])
+    assert faulty.promotions == 2
+    assert faulty.replays > 0                    # in-flight ring chunks
+    for r in range(4):
+        np.testing.assert_array_equal(faulty.states[r]["acc"],
+                                      clean.states[r]["acc"])
+
+
+def test_logged_algorithm_payloads_counted_by_real_size():
+    """Ring/tree schedules wrap arrays in tuples/dicts; the sender-log
+    byte accounting must see the array bytes, not a constant, or the
+    log-eviction cap never fires for algorithm traffic."""
+    from repro.core.message_log import LoggedMessage
+    arr = np.zeros(1 << 10)
+    assert LoggedMessage(0, 0, 1, -35, (2, arr), 0).nbytes() >= arr.nbytes
+    assert LoggedMessage(0, 0, 1, -32, {3: arr, 4: arr}, 0).nbytes() >= \
+        2 * arr.nbytes
+
+
+def test_neighbor_collective_validation():
+    from repro.comm import CollectiveEngine, ReplicaTransport
+    rmap = ReplicaMap(3, 0)
+    t = ReplicaTransport(rmap, 3)
+    eps = {w: t.register(w) for w in rmap.alive()}
+    engine = CollectiveEngine(t)
+    with pytest.raises(ValueError):              # self-neighbor
+        engine.post(eps[0], ("neighbor_allgather", 1.0, [0, 1]), 0)
+    with pytest.raises(ValueError):              # chunk/neighbor mismatch
+        engine.post(eps[0], ("neighbor_alltoall", [1.0], [1, 2]), 0)
+
+
+# ------------------------------------------- runtime cost accounting
+
+def test_topo_charges_memstore_ckpt_from_priced_traffic():
+    """With a topology + the memory backend, C and R are MEASURED from the
+    priced push/fetch traffic, not taken from the CostModel constants —
+    and recovery stays bitwise."""
+    def run(topology, events=()):
+        ft = FTConfig(mode="combined", replication_degree=1.0, mtbf_s=1e9,
+                      ckpt_interval_s=3.0, ckpt_backend="memory",
+                      topology=topology)
+        costs = CostModel(step_time_s=1.0, ckpt_cost_s=50.0,
+                          restore_cost_s=0.25, mem_ckpt_cost_s=50.0)
+        rt = SimRuntime(RingFirstApp(4), ft, costs=costs,
+                        failure_events=list(events), workers_per_node=2)
+        return rt, rt.run(8)
+
+    rt, clean = run(None)
+    rt_t, topo = run("fattree")
+    # the flat run charges the 50 s constant per checkpoint; the topo run
+    # charges the α‑β-priced push traffic (tiny states -> far below it)
+    assert topo.time.ckpt_write > 0
+    assert topo.time.ckpt_write < clean.time.ckpt_write / 100
+    ev = [FailureEvent(1.5, (1,)), FailureEvent(4.2, (5,))]
+    rt_f, faulty = run("fattree", ev)
+    assert faulty.restarts == 1 and faulty.store_restores == 1
+    assert faulty.time.restore > 0
+    for r in range(4):
+        np.testing.assert_array_equal(faulty.states[r]["acc"],
+                                      clean.states[r]["acc"])
+
+
+# ------------------------------------------------- placement over graphs
+
+def test_placement_avoids_owner_switch_on_fattree():
+    """With a topo graph, the failure domain is the edge switch, so the
+    shift-by-k scan must jump past same-switch ranks."""
+    n = 8
+    rmap = ReplicaMap(n, 0)
+    cluster = ClusterTopology(n, 1)              # one rank per node
+    graph = make_topology("fattree", n, radix=2)
+    pl = PartnerPlacement(rmap, cluster, k_partners=2, graph=graph)
+    for r in range(n):
+        own = graph.failure_domain(r)
+        for p in pl.partners_of(r):
+            assert graph.failure_domain(p) != own
+    # without the graph, the next-door rank (same switch) is admissible
+    pl_flat = PartnerPlacement(rmap, cluster, k_partners=2)
+    assert any(graph.failure_domain(pl_flat.partners_of(r)[0]) ==
+               graph.failure_domain(r) for r in range(n))
+
+
+# --------------------------------------------------- serving batch fanout
+
+@pytest.mark.parametrize("replication", [True, False])
+def test_serve_batch_fanout_over_transport(replication):
+    jax = pytest.importorskip("jax")             # serve.py imports jax
+    from repro.launch.serve import BatchFanout
+
+    fan = BatchFanout(replication)
+    batch = np.arange(12, dtype=np.int32).reshape(3, 4)
+    got = fan.fan_out(batch)
+    np.testing.assert_array_equal(got, batch)
+    assert got is not batch                      # a transported copy
+    # the frontend's send was logged with send-IDs like any §6.3 message
+    log = fan.transport.send_logs[BatchFanout.FRONTEND_RANK].log
+    assert len(log) == 1 and log[0].dst == BatchFanout.SERVE_RANK
+    # second round advances the send-ID stream (dedup-able on replay)
+    got2 = fan.fan_out(batch + 1)
+    np.testing.assert_array_equal(got2, batch + 1)
+    assert fan.transport.send_logs[
+        BatchFanout.FRONTEND_RANK].log[-1].send_id == 1
