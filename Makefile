@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint check bench bench-smoke bench-store bench-topo
+.PHONY: test lint check bench bench-smoke bench-store bench-topo bench-clock
 
 test:
 	$(PY) -m pytest -x -q
@@ -23,7 +23,7 @@ bench:
 
 # the cheap failure-pipeline subset CI runs on every push
 bench-smoke:
-	$(PY) -m benchmarks.run --only fig13_log_replay --only fig9_time_distribution --only fig14_memstore --only fig15_topology
+	$(PY) -m benchmarks.run --only fig13_log_replay --only fig9_time_distribution --only fig14_memstore --only fig15_topology --only clock_breakdown
 
 # the disk-vs-memory checkpoint backend comparison (repro.store)
 bench-store:
@@ -32,3 +32,7 @@ bench-store:
 # topology-priced collectives: dense vs tree/ring + per-topology crossover
 bench-topo:
 	$(PY) -m benchmarks.run --only fig15_topology
+
+# the unified-clock TimeBreakdown across FTSession + SimRuntime (repro.clock)
+bench-clock:
+	$(PY) -m benchmarks.run --only clock_breakdown

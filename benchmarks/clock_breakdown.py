@@ -1,0 +1,79 @@
+"""Unified-clock time decomposition (repro.clock), numpy-only.
+
+One table, two runtimes, one ledger: drives ``FTSession`` (workload loop)
+and ``SimRuntime`` (message-level simulation) through failure scenarios
+and prints the per-component ``TimeBreakdown`` each produces — all
+sourced from the same ``VirtualClock`` engine.  The FTSession rows show
+the priced memstore C entering the ledger when a topology is set (push
+traffic measured through the transport instead of the flat constant);
+the SimRuntime row shows the switchboard allreduce charging
+``TimeBreakdown.comm`` through the priced transport.
+
+Runs in the CI bench-smoke job: pure numpy, ~1 s.
+"""
+import time
+
+import numpy as np
+
+from repro.configs.base import FTConfig
+from repro.ft import FTSession
+from repro.simrt import SimRuntime
+
+
+class CounterWorkload:
+    disk_checkpointable = False
+
+    def init_state(self):
+        return {"x": np.float64(1.0), "hist": np.zeros(64)}
+
+    def step(self, state, t):
+        x = state["x"] * 1.0000001 + np.sin(0.1 * t)
+        hist = np.roll(state["hist"], 1)
+        hist[0] = x
+        return {"x": x, "hist": hist}, float(x)
+
+
+class ScalarAllreduceApp:
+    """Non-pow2 world -> the switchboard allreduce path."""
+
+    n_ranks = 5
+
+    def init_state(self, rank):
+        return {"acc": np.zeros(8)}
+
+    def step(self, rank, state, t):
+        total = yield ("allreduce", np.full(8, float(rank + t)), "sum")
+        return {"acc": state["acc"] + total}
+
+
+def run() -> list:
+    t0 = time.perf_counter()
+    rows = []
+    steps = 24
+
+    session_cases = [
+        ("session_replication", "replication", None, {5: [0]}, {}),
+        ("session_combined_flat", "combined", None, {4: [1], 8: [9]},
+         dict(ckpt_interval_s=4.0, ckpt_backend="memory")),
+        ("session_combined_priced", "combined", "flat", {4: [1], 8: [9]},
+         dict(ckpt_interval_s=4.0, ckpt_backend="memory")),
+    ]
+    for name, mode, topology, kills, kw in session_cases:
+        session = FTSession(ft=FTConfig(mode=mode, topology=topology, **kw),
+                            injector=dict(kills), n_logical_workers=8,
+                            workers_per_node=4)
+        rep = session.run(CounterWorkload(), steps)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"clock/{name}", us,
+                     f"eff={rep.efficiency:.3f} "
+                     f"ckpt_writes={rep.ckpt_writes} "
+                     f"restarts={rep.restarts} | {rep.time.summary()}"))
+
+    rt = SimRuntime(ScalarAllreduceApp(),
+                    FTConfig(mode="replication", topology="flat"),
+                    workers_per_node=2)
+    res = rt.run(8)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("clock/simrt_switchboard_priced", us,
+                 f"eff={res.efficiency:.3f} | {res.time.summary()}"))
+    return rows

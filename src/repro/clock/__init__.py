@@ -1,0 +1,46 @@
+"""repro.clock — the shared priced virtual-time engine.
+
+The paper's central quantitative claim is an *efficiency* comparison:
+useful time vs. checkpoint / restore / rollback / replica-communication
+time.  Every number of that kind in this repo now comes from one
+accounting engine:
+
+  breakdown  - ``TimeBreakdown``, the priced component ledger (moved here
+               from repro.simrt; simrt re-exports it);
+  clock      - ``VirtualClock``: schedule clock + ledger with
+               ``charge(component, seconds)``, ledger-only charges
+               (``advance=False``), ``take_comm_time()``-style draining of
+               priced transports, and ``injection_horizon`` — the
+               horizon-slack formula previously duplicated between
+               ``FTSession.run`` and ``SimRuntime.run``;
+  pricing    - ``pricing_from_ft``: FTConfig.topology -> (TopoGraph,
+               TopoCostModel, collective registry), the cost-model
+               injection both runtimes and the serving fan-out share.
+
+Who charges what:
+
+  SimRuntime            useful/rollback/comm/ckpt_write/restore/repair/
+                        log_removal (schedule-advancing, as before)
+  FTSession             useful/rollback (schedule-advancing) + repair
+                        (ledger-only, from the RecoveryPlan)
+  FT strategies         ckpt_write/restore at the backend's priced cost
+                        (ledger-only: the session's schedule clock stays
+                        step-indexed, bitwise-identical to the pre-clock
+                        ``vtime`` float loop)
+  MemBackend/MemStore   measured push/fetch traffic through the priced
+                        transport (becomes the effective Young-Daly C)
+  CollectiveEngine      switchboard allreduce/barrier per-message through
+                        the priced transport (no more dense estimate)
+  BatchFanout (serve)   request-batch bcast traffic -> RunReport.time.comm
+
+See docs/clock_api.md for the contracts and parity guarantees.
+"""
+from repro.clock.breakdown import COMPONENTS, TimeBreakdown
+from repro.clock.clock import VirtualClock, injection_horizon
+from repro.clock.pricing import ClockPricing, pricing_from_ft
+
+__all__ = [
+    "TimeBreakdown", "COMPONENTS",
+    "VirtualClock", "injection_horizon",
+    "ClockPricing", "pricing_from_ft",
+]

@@ -1,0 +1,113 @@
+"""VirtualClock: one priced virtual-time engine for every runtime layer.
+
+Before this module, only ``SimRuntime`` produced a priced ``TimeBreakdown``
+while ``FTSession`` advanced a flat ``vtime += step_time_s`` float — two
+accounting systems for one efficiency claim.  The clock unifies them:
+
+  * ``now`` is the schedule clock — the value failure injectors and the
+    coordinator checkpoint timer read;
+  * ``breakdown`` is the priced processor-time ledger (the shared
+    ``TimeBreakdown``) every layer charges into;
+  * ``charge(component, seconds)`` books time into the ledger and, by
+    default, advances the schedule clock with it.  ``advance=False``
+    books ledger-only charges: components that cost processor time but do
+    not move the driver's schedule (FTSession's step-indexed loop keeps
+    its pre-clock vtime trajectory this way — bitwise, so time-indexed
+    injector schedules replay identically across the refactor);
+  * ``charge_comm(transport)`` / ``drain_comm(transport)`` are the
+    ``take_comm_time()``-style draining of a priced ``ReplicaTransport``:
+    the max per-sender α‑β message time accrued since the last take is
+    charged to ``comm`` (or discarded, for measurement resets);
+  * ``injection_horizon`` is the horizon-slack formula that was duplicated
+    between ``FTSession.run`` and ``SimRuntime.run``.
+
+The clock knows nothing about scheduling or failure policy; it is the
+ledger those layers write.  Cost-model injection (building the
+``repro.topo.TopoCostModel`` a transport prices messages with) lives in
+``repro.clock.pricing``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.clock.breakdown import COMPONENTS, TimeBreakdown
+
+
+def injection_horizon(n_steps: int, step_time_s: float,
+                      ckpt_cost_s: float = 0.0) -> float:
+    """Failure-injection horizon with slack: rollbacks extend virtual time
+    past ``n_steps``, so time-indexed schedules get 2x headroom, plus a
+    checkpoint-write allowance when the caller charges checkpoints to the
+    schedule clock (SimRuntime does; FTSession's default C is 0).
+
+    This is the one copy of the formula previously duplicated between
+    ``FTSession.run`` and ``SimRuntime.run``.
+    """
+    return n_steps * step_time_s * 2.0 + 100.0 * ckpt_cost_s
+
+
+class VirtualClock:
+    """Schedule clock + priced TimeBreakdown ledger.
+
+    ``breakdown`` may be supplied so the ledger can live inside a result
+    object (``RunResult.time`` / ``RunReport.time``) while the clock
+    remains the only writer; ``cost_model`` is the optional
+    ``repro.topo.TopoCostModel`` the owning runtime injected into its
+    transports (kept here so strategies/backends can price their own
+    traffic through the same model).
+    """
+
+    def __init__(self, breakdown: Optional[TimeBreakdown] = None,
+                 cost_model=None):
+        self.breakdown = breakdown if breakdown is not None \
+            else TimeBreakdown()
+        self.cost_model = cost_model
+        self.now = 0.0
+
+    # -- charging ------------------------------------------------------------
+
+    def charge(self, component: str, seconds: float, *,
+               advance: bool = True) -> float:
+        """Book ``seconds`` of ``component`` time into the ledger;
+        ``advance`` also moves the schedule clock.  Returns ``seconds``."""
+        if component not in COMPONENTS:
+            raise ValueError(f"unknown time component {component!r}; "
+                             f"expected one of {COMPONENTS}")
+        if seconds < 0:
+            raise ValueError(f"cannot charge negative time ({seconds})")
+        setattr(self.breakdown, component,
+                getattr(self.breakdown, component) + seconds)
+        if advance:
+            self.now += seconds
+        return seconds
+
+    # -- schedule-clock motion (no ledger entry) -----------------------------
+
+    def advance(self, seconds: float) -> float:
+        """Move the schedule clock without booking a component (the
+        scheduler's own step boundary handling)."""
+        self.now += seconds
+        return self.now
+
+    def advance_to(self, t: float) -> None:
+        """Set the schedule clock to an absolute step boundary (SimRuntime
+        pins step ends to ``t0 + step_time`` regardless of mid-step repair
+        charges — preserved exactly)."""
+        self.now = t
+
+    # -- priced-transport draining -------------------------------------------
+
+    def drain_comm(self, transport) -> float:
+        """Discard the transport's accrued comm time (reset before a
+        measurement window); returns the discarded seconds."""
+        return transport.take_comm_time()
+
+    def charge_comm(self, transport, *, component: str = "comm",
+                    advance: bool = True) -> float:
+        """Drain the transport's accrued α‑β message time and charge it
+        (to ``comm`` by default; store backends charge their measured push
+        or fetch traffic to ``ckpt_write``/``restore`` instead)."""
+        dt = transport.take_comm_time()
+        if dt:
+            self.charge(component, dt, advance=advance)
+        return dt

@@ -53,6 +53,7 @@ from typing import Any, Dict, Optional, Tuple
 import numpy as np
 
 from repro.comm.transport import NOTHING, Endpoint, ReplicaTransport
+from repro.core.message_log import payload_nbytes
 
 # reserved tag space for transport collectives (apps use tags >= 0;
 # repro.store uses -21..-24, repro.topo.algorithms -31..-38)
@@ -150,7 +151,15 @@ class CollectiveOp:
 
 class _SwitchboardOp(CollectiveOp):
     """Matches role-tagged contributions in the engine's table (no
-    messages): the §5 role-aware completion rule with promotion fallback."""
+    messages): the §5 role-aware completion rule with promotion fallback.
+
+    Pricing: the in-memory match stands in for a dense exchange — one
+    message from every endpoint to each of its n-1 peers.  When the
+    transport carries a cost model those phantom messages are charged
+    through it (``charge_phantom``, same §5 routing as a real send), so
+    switchboard and tree/ring algorithms report a comparable
+    ``TimeBreakdown.comm``; the closed-form ``collective_time`` estimator
+    remains only for policy layers with no transport at hand."""
 
     def pending_heads(self):
         return ()                            # shares the "collective" head
@@ -162,6 +171,15 @@ class _SwitchboardOp(CollectiveOp):
 
     def _key_extra(self, op) -> tuple:
         return ()
+
+    def _charge_dense(self, engine, ep, rank, value=None) -> None:
+        t = engine.transport
+        if t.cost_model is None:
+            return                       # unpriced: skip sizing the payload
+        nbytes = payload_nbytes(value) if value is not None else 0
+        for dst in range(engine.n):
+            if dst != rank:
+                t.charge_phantom(ep, dst, nbytes)
 
 
 class AllreduceOp(_SwitchboardOp):
@@ -175,6 +193,7 @@ class AllreduceOp(_SwitchboardOp):
         key = self._key(engine, ep, op, step)
         engine.contrib.setdefault(key, {})[(role, rank)] = \
             copy.deepcopy(value)
+        self._charge_dense(engine, ep, rank, value)
         return ("collective", key, redop)
 
     def resolve(self, engine, ep, role, rank, pend):
@@ -207,6 +226,7 @@ class BarrierOp(_SwitchboardOp):
     def post(self, engine, ep, role, rank, op, step):
         key = self._key(engine, ep, op, step)
         engine.contrib.setdefault(key, {})[rank] = (role, True)
+        self._charge_dense(engine, ep, rank)      # zero-byte sync round
         return ("collective", key, None)
 
     def resolve(self, engine, ep, role, rank, pend):

@@ -130,6 +130,28 @@ class ReplicaTransport:
         self.comm_time.clear()
         return worst
 
+    def charge_phantom(self, sender: Endpoint, dst_rank: int,
+                       nbytes: int) -> None:
+        """Price one message the caller matched in shared memory instead
+        of sending (the switchboard collectives): identical §5 routing and
+        accrual to ``send`` — cmp→cmp plus intercomm fill-in, rep→rep with
+        replica-side skip — but no delivery, no logging, no send-ID.  This
+        is how switchboard allreduce/barrier report ``TimeBreakdown.comm``
+        through the same priced transport as the p2p-schedule algorithms
+        (no-op without a cost model)."""
+        if self.cost_model is None:
+            return
+        role, src_rank = self.rmap.role_of(sender.wid)
+        if role == "cmp":
+            dst_wid = self.rmap.cmp.get(dst_rank)
+            if dst_wid is not None:
+                self._charge(sender.wid, dst_wid, nbytes)
+            if self.rmap.rep.get(dst_rank) is not None and \
+                    self.rmap.rep.get(src_rank) is None:
+                self._charge(sender.wid, self.rmap.rep[dst_rank], nbytes)
+        elif self.rmap.rep.get(dst_rank) is not None:
+            self._charge(sender.wid, self.rmap.rep[dst_rank], nbytes)
+
     def send(self, sender: Endpoint, dst_rank: int, tag: int, payload,
              step: int, *, log: bool) -> None:
         """Route one send per the paper's §5 parallel scheme."""

@@ -4,7 +4,16 @@ One loop, every workload: failure intake (injector -> interception ->
 coordinators -> plan_recovery), strategy-owned step execution (replica
 double-execution in replication modes), Young-Daly checkpointing, O(1)
 promotion and elastic restart — producing a ``RunReport`` with a typed
-event stream.
+event stream and the shared priced ``TimeBreakdown`` (repro.clock).
+
+Time accounting: the session's *schedule* clock is step-indexed — it
+advances exactly ``step_time_s`` per executed step, bitwise-identical to
+the pre-clock ``vtime`` float loop, so time-indexed failure injectors and
+the coordinator checkpoint timer replay identically across the refactor.
+Everything else the run spends processor time on (priced checkpoint
+pushes, restores, repair) is charged into the ``RunReport.time`` ledger
+WITHOUT moving the schedule clock (``VirtualClock.charge(...,
+advance=False)``); efficiency reads come from the ledger.
 
 This generalizes the old FTTrainer (which survives as a thin shim in
 repro.core.ft_runtime) and subsumes ReplicatedServer's hand-rolled cache
@@ -16,6 +25,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, List, Optional
 
+from repro.clock import (TimeBreakdown, VirtualClock, injection_horizon,
+                         pricing_from_ft)
 from repro.configs.base import FTConfig
 from repro.core.coordinator import ClusterTopology, CoordinatorSet
 from repro.core.replica_map import ReplicaMap
@@ -47,11 +58,22 @@ class RunReport:
     ckpt_s: float = 0.0
     restore_s: float = 0.0
     final_state: Any = None
+    # the shared priced virtual-time ledger (repro.clock.TimeBreakdown —
+    # the same class SimRuntime's RunResult.time carries): useful/rollback
+    # from the step loop, ckpt_write/restore at the backend's priced cost,
+    # repair from the recovery plans, comm from priced fan-out traffic
+    time: TimeBreakdown = field(default_factory=TimeBreakdown)
 
     @property
     def losses(self) -> List[float]:
         """Scalar metrics as floats (train workloads emit the loss)."""
         return [float(m) for m in self.metrics if m is not None]
+
+    @property
+    def efficiency(self) -> float:
+        """Useful fraction of the ledger (mirrors RunResult.efficiency)."""
+        t = self.time.total
+        return self.time.useful / t if t > 0 else 1.0
 
 
 # Backwards-compatible alias: the old name for the train-specific report.
@@ -100,6 +122,11 @@ class FTSession:
         self.topology = ClusterTopology(self.rmap.world_size,
                                         self.workers_per_node)
         self.coords = CoordinatorSet(self.topology, float("inf"))
+        # cost-model injection (repro.clock.pricing): with
+        # FTConfig.topology set, the checkpoint backend's transport prices
+        # every push/fetch message, so C and R are measured, not assumed
+        self.pricing = pricing_from_ft(self.ft, self.topology)
+        self.clock = VirtualClock(cost_model=self.pricing.cost_model)
 
     # -- main loop -----------------------------------------------------------
 
@@ -107,6 +134,9 @@ class FTSession:
         rep = RunReport()
         wall0 = time.perf_counter()
         self._init_fabric()                       # re-entrant sessions
+        # the run's clock writes straight into the report's ledger
+        clock = self.clock = VirtualClock(breakdown=rep.time,
+                                          cost_model=self.pricing.cost_model)
         # the strategy's on_start builds its CheckpointBackend
         # (repro.store.make_backend) and re-points the self.ckpt alias
         self.ckpt = None
@@ -114,16 +144,19 @@ class FTSession:
         state = workload.init_state()
         strat = self.strategy
         strat.on_start(workload, state, rep)
-        # horizon slack: rollbacks extend virtual time past n_steps, so
-        # time-indexed schedules get 2x headroom (mirrors SimRuntime.run)
-        self.injector.prepare(n_steps * self.step_time_s * 2.0,
-                              self.rmap.alive())
+        # horizon slack (shared formula, repro.clock.injection_horizon):
+        # rollbacks extend virtual time past n_steps, so time-indexed
+        # schedules get 2x headroom
+        self.injector.prepare(
+            injection_horizon(n_steps, self.step_time_s,
+                              self.ft.ckpt_cost_s),
+            self.rmap.alive())
 
-        vtime = 0.0
         step = 0
+        done_through = 0                  # first step index not yet earned
         while step < n_steps:
             # --- failure intake (injector -> coordinators -> plan) ---------
-            for ev in self.injector.poll(step, vtime):
+            for ev in self.injector.poll(step, clock.now):
                 fresh = self.coords.intercept_failure(list(ev.workers))
                 fresh = [w for w in fresh if w not in self.rmap.dead]
                 if not fresh:
@@ -133,6 +166,9 @@ class FTSession:
                     self.rmap, fresh,
                     last_ckpt_step=strat.last_ckpt_step, current_step=step,
                     store=strat.recovery_store())
+                # shrink + message recovery (paper Fig 9 'repair');
+                # ledger-only: the step-indexed schedule clock ignores it
+                clock.charge("repair", plan.repair_cost_s, advance=False)
                 rep.events.append(StepEvent(step, plan.kind,
                                             {"failed": list(fresh),
                                              "promotions": plan.promotions,
@@ -142,14 +178,20 @@ class FTSession:
                                                 step, rep)
 
             # --- one workload step (strategy may double-execute) -----------
+            component = "rollback" if step < done_through else "useful"
             state, metrics = strat.step(workload, state, step)
             rep.metrics.append(metrics)
+            if step >= done_through:
+                done_through = step + 1
             step += 1
-            vtime += self.step_time_s
+            # the schedule clock advances by exactly step_time_s per
+            # executed step (the pre-clock vtime trajectory, bitwise);
+            # re-executed post-rollback steps are booked as 'rollback'
+            clock.charge(component, self.step_time_s)
             rep.steps = step
 
             # --- coordinated checkpoint (primary timer) --------------------
-            strat.maybe_checkpoint(workload, state, step, vtime, rep)
+            strat.maybe_checkpoint(workload, state, step, clock.now, rep)
 
         rep.final_state = state
         rep.wall_s = time.perf_counter() - wall0

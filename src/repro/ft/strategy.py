@@ -159,13 +159,22 @@ class _CheckpointMixin:
             self.backend.on_failure(plan.failed_workers)
         return super().handle_plan(workload, state, plan, step, rep)
 
+    def _effective_c(self) -> float:
+        """The effective checkpoint cost C feeding Young-Daly: the
+        configured constant, else the backend's last (priced or wall-
+        measured) write cost."""
+        measured = self.backend.last_write_s or 0.05
+        return self.ft.ckpt_cost_s or max(measured, 1e-6)
+
+    def _auto_interval(self) -> bool:
+        return not self.ft.ckpt_interval_s and not self.ft.ckpt_cost_s
+
     def maybe_checkpoint(self, workload, state, step, vtime, rep) -> None:
         sess = self.session
         if not self._interval_set:
-            measured = self.backend.last_write_s or 0.05
-            c = self.ft.ckpt_cost_s or max(measured, 1e-6)
             interval = self.ft.ckpt_interval_s or \
-                ckpt_policy.young_daly_interval(self.ft.mtbf_s, c)
+                ckpt_policy.young_daly_interval(self.ft.mtbf_s,
+                                                self._effective_c())
             sess.coords.set_interval(interval, vtime)
             self._interval_set = True
         if sess.coords.due_checkpoint(vtime):
@@ -174,7 +183,26 @@ class _CheckpointMixin:
             rep.ckpt_s += time.perf_counter() - t0
             rep.ckpt_writes += 1
             self.last_ckpt_step = step
-            sess.coords.restart_timer(vtime)
+            # the write's cost enters the shared ledger (ledger-only: the
+            # session's schedule clock stays step-indexed).  A configured
+            # ft.ckpt_cost_s is the modeled C and wins — the same
+            # precedence SimRuntime._ckpt_c applies — else the backend's
+            # priced/measured write cost
+            sess.clock.charge("ckpt_write",
+                              self.ft.ckpt_cost_s
+                              or self.backend.last_write_s or 0.0,
+                              advance=False)
+            if self._auto_interval() and getattr(self.backend,
+                                                 "modeled_cost", False):
+                # Young-Daly recomputed from the *effective* priced C: a
+                # priced store measures C from its actual push traffic,
+                # which can drift as the state grows
+                sess.coords.set_interval(
+                    ckpt_policy.young_daly_interval(self.ft.mtbf_s,
+                                                    self._effective_c()),
+                    vtime)
+            else:
+                sess.coords.restart_timer(vtime)
 
     def _restore(self, workload, state, rep):
         from repro.store import StoreUnrecoverable
@@ -187,7 +215,14 @@ class _CheckpointMixin:
             # more failure domains lost than the placement tolerates:
             # restart from scratch like the no-checkpoint baseline
             return super()._restore(workload, state, rep)
-        rep.restore_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        rep.restore_s += dt
+        # priced/measured R when the backend reports one (a measured 0.0
+        # is a legitimate cost: all shards served owner-locally); wall
+        # time only when the backend has no notion of restore cost
+        cost = getattr(self.backend, "last_restore_s", None)
+        self.session.clock.charge("restore", dt if cost is None else cost,
+                                  advance=False)
         return state, ck_step
 
 

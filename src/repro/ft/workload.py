@@ -31,8 +31,12 @@ import numpy as np
 
 def copy_tree(tree):
     """Deep device copy — replica state must own its buffers (jitted steps
-    donate their inputs; aliased buffers would be invalidated)."""
-    import jax
+    donate their inputs; aliased buffers would be invalidated).  Without
+    jax (the numpy-only bench environment) plain pytrees deep-copy."""
+    try:
+        import jax
+    except ImportError:
+        return copy.deepcopy(tree)
     return jax.tree.map(lambda x: x.copy() if hasattr(x, "copy") else x, tree)
 
 

@@ -28,9 +28,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.clock import VirtualClock, pricing_from_ft
 from repro.comm import CollectiveEngine, NOTHING, ReplicaTransport
 from repro.configs import RunConfig, get_arch
 from repro.configs.base import FTConfig, ShapeConfig
+from repro.core.coordinator import ClusterTopology
 from repro.core.replica_map import ReplicaMap
 from repro.ft import DecodeWorkload, FTSession, StepKillInjector
 from repro.launch.step_fns import make_decode_step, make_prefill_step
@@ -47,13 +49,22 @@ class BatchFanout:
     replica worker, logged with send-IDs like any training message.  Both
     received copies must be bitwise identical; the cmp copy feeds the
     workload.
+
+    With ``ft.topology`` set the fan-out traffic is α‑β-priced and charged
+    into the fan-out's ``VirtualClock`` (repro.clock); ``generate`` merges
+    it into the run's ``RunReport.time.comm`` — serving batches spend time
+    in the same ledger training messages do.
     """
 
     SERVE_RANK, FRONTEND_RANK = 0, 1
 
-    def __init__(self, replication: bool):
+    def __init__(self, replication: bool, ft: FTConfig = None):
         self.rmap = ReplicaMap(2, 1 if replication else 0)
-        self.transport = ReplicaTransport(self.rmap, 2)
+        cluster = ClusterTopology(self.rmap.world_size, 1)
+        pricing = pricing_from_ft(ft or FTConfig(), cluster)
+        self.clock = VirtualClock(cost_model=pricing.cost_model)
+        self.transport = ReplicaTransport(self.rmap, 2,
+                                          cost_model=pricing.cost_model)
         self.engine = CollectiveEngine(self.transport)
         self.eps = {w: self.transport.register(w) for w in self.rmap.alive()}
         self.fanouts = 0
@@ -85,6 +96,8 @@ class BatchFanout:
         if rep_w is not None:
             np.testing.assert_array_equal(got[cmp_w], got[rep_w])
         self.fanouts += 1
+        # priced fan-out traffic -> the clock's comm ledger (0.0 unpriced)
+        self.clock.charge_comm(self.transport)
         return got[cmp_w]
 
 
@@ -94,7 +107,7 @@ class ReplicatedServer:
 
     def __init__(self, arch: str, *, reduced: bool = True, batch: int = 4,
                  prompt_len: int = 32, replication: bool = True,
-                 seed: int = 0):
+                 seed: int = 0, topology: str = None):
         cfg = get_arch(arch)
         if reduced:
             cfg = cfg.reduced()
@@ -112,7 +125,9 @@ class ReplicatedServer:
         self.replication = replication
         self.batch = batch
         self.prompt_len = prompt_len
-        self.fanout = BatchFanout(replication)
+        self.topology = topology
+        self.fanout = BatchFanout(replication,
+                                  ft=FTConfig(mode="none", topology=topology))
         self.failures = 0
         self.promotions = 0
         self.last_report = None
@@ -142,7 +157,8 @@ class ReplicatedServer:
         death is fatal (a restart would need a prefill replay)."""
         mode = "replication" if self.replication else "none"
         injector = StepKillInjector({kill_at: [0]}) if kill_at >= 0 else None
-        return FTSession(ft=FTConfig(mode=mode), injector=injector,
+        return FTSession(ft=FTConfig(mode=mode, topology=self.topology),
+                         injector=injector,
                          n_logical_workers=1, workers_per_node=1,
                          allow_restart=False)
 
@@ -153,6 +169,7 @@ class ReplicatedServer:
         reaches the serving rank over the transport bcast (logged,
         deduped), not by Python reference."""
         session = self.session(kill_at)
+        comm0 = self.fanout.clock.breakdown.comm
         prompt_tokens = self.fanout.fan_out(np.asarray(prompt_tokens))
         try:
             rep = session.run(self.workload(prompt_tokens), n_gen)
@@ -160,6 +177,9 @@ class ReplicatedServer:
             # fatal (unrecoverable) kill: still record the failure
             self.failures += 1
             raise
+        # the batch fan-out's priced traffic lands in the same ledger as
+        # the run's own time (0.0 without a topology)
+        rep.time.comm += self.fanout.clock.breakdown.comm - comm0
         self.last_report = rep
         self.failures += rep.failures
         self.promotions += rep.promotions
@@ -175,11 +195,15 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--kill-at", type=int, default=-1)
     ap.add_argument("--no-replication", action="store_true")
+    ap.add_argument("--topology", default=None,
+                    help="price fan-out + session time over this topo graph "
+                         "(flat|fattree|dragonfly|torus3d)")
     args = ap.parse_args(argv)
 
     srv = ReplicatedServer(args.arch, reduced=args.reduced, batch=args.batch,
                            prompt_len=args.prompt_len,
-                           replication=not args.no_replication)
+                           replication=not args.no_replication,
+                           topology=args.topology)
     prompts = np.random.default_rng(0).integers(
         0, srv.cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32)
     t0 = time.perf_counter()

@@ -39,6 +39,8 @@ import time as _time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
+from repro.clock import (TimeBreakdown, VirtualClock, injection_horizon,
+                         pricing_from_ft)
 from repro.comm import (NOTHING, CollectiveEngine, P2P_OPS, RecoveryManager,
                         ReplicaTransport)
 from repro.comm.transport import Endpoint
@@ -48,35 +50,9 @@ from repro.core.coordinator import ClusterTopology, CoordinatorSet
 from repro.core.failure_sim import FailureEvent
 from repro.core.replica_map import ApplicationDead, ReplicaMap
 
-
-@dataclass
-class TimeBreakdown:
-    """Virtual-time components (the paper's Fig 9).  ``comm`` is the
-    α‑β-priced message time (repro.topo) — zero unless FTConfig.topology
-    is set, since the flat cost model folds communication into
-    step_time_s."""
-
-    useful: float = 0.0
-    redundant: float = 0.0          # replica share of compute
-    comm: float = 0.0               # topo-priced per-message time
-    ckpt_write: float = 0.0
-    restore: float = 0.0
-    rollback: float = 0.0           # lost work re-executed after restart
-    repair: float = 0.0             # shrink + message recovery
-    log_removal: float = 0.0
-
-    @property
-    def total(self) -> float:
-        return (self.useful + self.redundant + self.comm + self.ckpt_write
-                + self.restore + self.rollback + self.repair
-                + self.log_removal)
-
-    def as_dict(self) -> dict:
-        return {"useful": self.useful, "redundant": self.redundant,
-                "comm": self.comm,
-                "ckpt_write": self.ckpt_write, "restore": self.restore,
-                "rollback": self.rollback, "repair": self.repair,
-                "log_removal": self.log_removal, "total": self.total}
+# TimeBreakdown lives in repro.clock now (the shared ledger FTSession and
+# the strategies charge too); re-exported here for the old import path.
+__all__ = ["SimRuntime", "CostModel", "RunResult", "TimeBreakdown"]
 
 
 @dataclass
@@ -173,25 +149,17 @@ class SimRuntime:
             injector if injector is not None else failure_events)
         self._injector_prepared = False
 
-        # cluster topology + α‑β message pricing (repro.topo): when
-        # FTConfig.topology names a graph, every transport message is
+        # cluster topology + α‑β message pricing (repro.clock.pricing):
+        # when FTConfig.topology names a graph, every transport message is
         # priced, the collective registry switches to the MPICH-style
         # tree/ring selection, and ckpt/restore costs are MEASURED from
         # the store's priced traffic instead of fed in as constants
-        self.topo_graph = None
-        self.topo_costs = None
-        engine_ops = None
-        if getattr(ft, "topology", None):
-            from repro.topo import (SelectionPolicy, TopoCostModel,
-                                    make_topo_ops, make_topology)
-            self.topo_graph = make_topology(ft.topology,
-                                            self.topology.n_nodes)
-            self.topo_costs = TopoCostModel(
-                self.topo_graph, alpha_s=ft.topo_alpha,
-                beta_Bps=ft.topo_beta, gamma_s_per_B=ft.topo_gamma)
-            self.topo_costs.attach(self.topology)
-            engine_ops = make_topo_ops(
-                SelectionPolicy(small_msg_bytes=ft.topo_small_msg))
+        self.pricing = pricing_from_ft(ft, self.topology)
+        self.topo_graph = self.pricing.graph
+        self.topo_costs = self.pricing.cost_model
+        engine_ops = self.pricing.engine_ops
+        # the unified virtual-time engine: schedule clock + priced ledger
+        self.clock = VirtualClock(cost_model=self.topo_costs)
 
         # the layered comm subsystem (repro.comm)
         self.transport = ReplicaTransport(self.rmap, self.n,
@@ -215,15 +183,21 @@ class SimRuntime:
             self.workers[w] = _Worker(w, app.init_state(rank),
                                       self.transport.register(w))
 
-        self.t = 0.0
         self.step_idx = 0
         self.max_step_done = 0
-        self.result = RunResult(states={}, time=TimeBreakdown(), steps_done=0)
+        self.result = RunResult(states={}, time=self.clock.breakdown,
+                                steps_done=0)
         self.last_ckpt_step = 0
         self._ckpt_mem: Optional[dict] = None
         if ckpt_dir:
             os.makedirs(ckpt_dir, exist_ok=True)
         self._write_checkpoint(baseline=True)
+
+    @property
+    def t(self) -> float:
+        """Virtual time — the clock's schedule clock (kept as a read-only
+        attribute for callers/tests that inspect ``rt.t``)."""
+        return self.clock.now
 
     # ------------------------------------------------------------------ ckpt
 
@@ -267,10 +241,10 @@ class SimRuntime:
             # not a constant: it is the α‑β-priced time of the push
             # traffic the save just generated.
             if self.topo_costs is not None:
-                self.transport.take_comm_time()
+                self.clock.drain_comm(self.transport)
             self.store.save(snap["step"], snap["ranks"])
             if self.topo_costs is not None:
-                topo_c = self.transport.take_comm_time()
+                topo_c = self.clock.drain_comm(self.transport)
         elif self.ckpt_dir:
             for r, data in snap["ranks"].items():
                 with open(self._ckpt_path(r, baseline), "wb") as f:
@@ -280,14 +254,12 @@ class SimRuntime:
                     f.write(str(snap["step"]))
         if not baseline:
             c = topo_c if topo_c is not None else self._ckpt_c()
-            self.result.time.ckpt_write += c
-            self.t += c
+            self.clock.charge("ckpt_write", c)
             # checkpoint boundary: trim message logs (log removal component)
             for log in self.transport.send_logs.values():
                 log.trim_before_step(self.step_idx)
-            self.result.time.log_removal += self.costs.log_removal_cost_s
-            self.t += self.costs.log_removal_cost_s
-        self.coords.restart_timer(self.t)
+            self.clock.charge("log_removal", self.costs.log_removal_cost_s)
+        self.coords.restart_timer(self.clock.now)
 
     def _restore_checkpoint(self):
         """Elastic restart (paper §3.3): rebuild the world from the last
@@ -322,7 +294,7 @@ class SimRuntime:
             from repro.store import StoreUnrecoverable
             self.store.rebind(topology=self.topology)
             if self.topo_costs is not None:
-                self.transport.take_comm_time()
+                self.clock.drain_comm(self.transport)
             try:
                 ranks, step = self.store.restore()
                 snap = {"step": step, "ranks": ranks}
@@ -331,7 +303,7 @@ class SimRuntime:
                     # topo-priced restore: the fetch/reply traffic the
                     # pull just generated, plus the configured relaunch
                     # surcharge (restore_cost_s doubles as that floor)
-                    restore_c = self.transport.take_comm_time() \
+                    restore_c = self.clock.drain_comm(self.transport) \
                         + self.costs.restore_cost_s
             except StoreUnrecoverable:
                 # beyond the placement's tolerance: fall back to the
@@ -347,8 +319,7 @@ class SimRuntime:
 
         self.step_idx = snap["step"]
         self.result.restarts += 1
-        self.result.time.restore += restore_c
-        self.t += restore_c
+        self.clock.charge("restore", restore_c)
 
     # --------------------------------------------------------------- failure
 
@@ -379,8 +350,7 @@ class SimRuntime:
         promoted = [e for e in events if e["kind"] == "promote"]
         self.result.promotions += len(promoted)
         # drain + replay on promoted workers (repro.comm.recovery)
-        self.result.time.repair += self.costs.repair_cost_s
-        self.t += self.costs.repair_cost_s
+        self.clock.charge("repair", self.costs.repair_cost_s)
         for e in promoted:
             self.recovery.repair_promoted(self.workers[e["promoted"]].ep,
                                           self.step_idx,
@@ -450,25 +420,28 @@ class SimRuntime:
                 raise RuntimeError(f"deadlock at step {self.step_idx}: "
                                    f"{blocked}")
 
-        self.t = step_end
+        # step boundary is pinned to step_end even when mid-step repair
+        # charges moved the clock (pre-clock behavior, kept bitwise)
+        self.clock.advance_to(step_end)
         if self.topo_costs is not None:
             # α‑β-priced message time of this step (max over workers:
             # senders serialize on their own port, workers run in
-            # parallel) — a NEW virtual-time component the flat model
-            # folded into step_time_s
-            comm = self.transport.take_comm_time()
-            self.result.time.comm += comm
-            self.t += comm
+            # parallel) — a virtual-time component the flat model folds
+            # into step_time_s
+            self.clock.charge_comm(self.transport)
         if self.step_idx < self.max_step_done:
-            # re-executing work lost to a rollback (paper Fig 9 'rollback')
-            self.result.time.rollback += self.costs.step_time_s
+            # re-executing work lost to a rollback (paper Fig 9 'rollback');
+            # ledger-only: the schedule clock already sits at step_end
+            self.clock.charge("rollback", self.costs.step_time_s,
+                              advance=False)
         else:
-            self.result.time.useful += self.costs.step_time_s
+            self.clock.charge("useful", self.costs.step_time_s,
+                              advance=False)
             self.max_step_done = self.step_idx + 1
         if self.m:
             # replica share is redundant work (paper Fig 9 accounting is on
             # processor-seconds: half the machine redoes the other half)
-            self.result.time.redundant += 0.0  # kept in efficiency formulas
+            self.clock.charge("redundant", 0.0, advance=False)
         self.step_idx += 1
         self.result.steps_done = self.step_idx
 
@@ -492,8 +465,8 @@ class SimRuntime:
         if not self._injector_prepared:
             # horizon with slack: virtual time also advances on checkpoint
             # writes/restores (pre-scheduled event lists ignore prepare)
-            horizon = n_steps * self.costs.step_time_s * 2.0 \
-                + 100.0 * self.costs.ckpt_cost_s
+            horizon = injection_horizon(n_steps, self.costs.step_time_s,
+                                        self.costs.ckpt_cost_s)
             self.injector.prepare(horizon, self.rmap.alive())
             self._injector_prepared = True
         while self.step_idx < n_steps:

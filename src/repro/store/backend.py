@@ -56,10 +56,12 @@ class DiskBackend:
     """The existing on-disk Checkpointer behind the backend protocol."""
 
     kind = "disk"
+    modeled_cost = False             # C/R are wall-measured, not priced
 
     def __init__(self, ckpt_dir: str, n_bands: int = 4):
         from repro.checkpoint import Checkpointer   # pulls in jax
         self.ckpt = Checkpointer(ckpt_dir, n_bands)
+        self.last_restore_s = 0.0
 
     @property
     def last_write_s(self) -> float:
@@ -70,7 +72,10 @@ class DiskBackend:
         return self.ckpt.save(step, state, baseline=baseline, extra=extra)
 
     def restore(self, like, *, workload=None):
+        import time
+        t0 = time.perf_counter()
         state, step, _extra = self.ckpt.restore(like)
+        self.last_restore_s = time.perf_counter() - t0
         return state, step
 
     def has_checkpoint(self) -> bool:
@@ -89,25 +94,42 @@ class MemBackend:
     placement partners.  Worker deaths reported by the session kill the
     matching store memory, and an elastic restart rebinds the store to the
     session's rebuilt fabric before pulling the shards back.
+
+    Cost accounting: with the session's clock carrying a cost model
+    (``FTConfig.topology`` set), the store transport prices every push and
+    fetch message, and ``last_write_s`` / ``last_restore_s`` are MEASURED
+    from that traffic (max per-sender α‑β time — the value the strategy
+    charges to ``TimeBreakdown.ckpt_write``/``restore`` and Young-Daly
+    reads as the effective C).  Without a cost model they fall back to the
+    flat closed-form ``ckpt_policy.memstore_*`` constants, as before.
     """
 
     kind = "memory"
+    modeled_cost = True              # C/R are modeled/priced, not wall time
 
     def __init__(self, session, *, k_partners: int = 2, n_bands: int = 4,
                  net_bw_Bps: float = ckpt_policy.DEFAULT_NET_BW_BPS):
         self.session = session
         self.net_bw_Bps = net_bw_Bps
         self.last_write_s = 0.0
+        self.last_restore_s = 0.0
         self.k_partners = k_partners
         self.n_bands = n_bands
         self.store = self._build(session.rmap, session.topology)
 
+    def _cost_model(self):
+        clock = getattr(self.session, "clock", None)
+        return clock.cost_model if clock is not None else None
+
     def _build(self, rmap, topology) -> MemStore:
-        transport = ReplicaTransport(rmap, rmap.n)
+        transport = ReplicaTransport(rmap, rmap.n,
+                                     cost_model=self._cost_model())
         for w in rmap.alive():
             transport.register(w)
+        graph = getattr(getattr(self.session, "pricing", None), "graph",
+                        None)
         return MemStore(transport, topology, k_partners=self.k_partners,
-                        n_bands=self.n_bands)
+                        n_bands=self.n_bands, graph=graph)
 
     # -- protocol ------------------------------------------------------------
 
@@ -119,11 +141,19 @@ class MemBackend:
         blob = pickle.dumps(snap, protocol=pickle.HIGHEST_PROTOCOL)
         n = self.store.transport.rmap.n
         chunks = MemStore._chunk(blob, n)
+        priced = self.store.transport.cost_model is not None
+        if priced:
+            self.store.transport.take_comm_time()     # measurement reset
         self.store.save(step, {r: chunks[r] for r in range(n)})
-        # the modeled (network-bound) C per process feeds Young-Daly
-        self.last_write_s = ckpt_policy.memstore_ckpt_cost(
-            len(blob) / n, n_partners=self.k_partners,
-            net_bw_Bps=self.net_bw_Bps, n_messages=self.n_bands)
+        if priced:
+            # C measured from the α‑β-priced push traffic the save just
+            # generated (max over senders: NICs serialize, ranks overlap)
+            self.last_write_s = self.store.transport.take_comm_time()
+        else:
+            # flat model: the closed-form network-bound C per process
+            self.last_write_s = ckpt_policy.memstore_ckpt_cost(
+                len(blob) / n, n_partners=self.k_partners,
+                net_bw_Bps=self.net_bw_Bps, n_messages=self.n_bands)
         return self.last_write_s
 
     def restore(self, like, *, workload=None):
@@ -131,12 +161,23 @@ class MemBackend:
         sess = self.session
         # the session swapped in the restarted fabric before calling us:
         # rebuild the store world on it (shard memory carries over)
-        transport = ReplicaTransport(sess.rmap, sess.rmap.n)
+        transport = ReplicaTransport(sess.rmap, sess.rmap.n,
+                                     cost_model=self._cost_model())
         for w in sess.rmap.alive():
             transport.register(w)
         self.store.rebind(topology=sess.topology, transport=transport)
+        priced = transport.cost_model is not None
+        if priced:
+            transport.take_comm_time()                 # measurement reset
         states, step = self.store.restore()      # raises StoreUnrecoverable
         blob = b"".join(states[r].tobytes() for r in sorted(states))
+        if priced:
+            # R measured from the fetch/reply traffic of the pull
+            self.last_restore_s = transport.take_comm_time()
+        else:
+            self.last_restore_s = ckpt_policy.memstore_restore_cost(
+                len(blob) / max(sess.rmap.n, 1), net_bw_Bps=self.net_bw_Bps,
+                relaunch_s=0.0)
         snap = pickle.loads(blob)
         state = restore_state(workload, snap) if workload is not None \
             else snap

@@ -22,6 +22,18 @@ shift-by-k pattern of ReStore — in three preference passes:
      failure domains at all — the store still helps, but `tolerance()`
      reports what it can actually absorb).
 
+With a ``TopoGraph``, equally-admissible candidates within passes 1 and 2
+are tie-broken by *contention*: each chosen partner's push path deposits
+``1 / link_share`` on every link it crosses, and the next partner is the
+admissible candidate minimizing the resulting maximum link load — so a
+dragonfly owner spreads its pushes over distinct global links and a torus
+owner over both ring directions instead of piling consecutive ranks onto
+one cross-domain link.  Candidates of equal load keep the shift order, so
+flat graphs (where every cross-node path is symmetric) reproduce the
+unweighted shift-by-k choice exactly — property-tested.  The
+never-share-a-failure-domain invariant is untouched: the tie-break only
+reorders candidates that were already admissible in the same pass.
+
 ``tolerance()`` verifies the guarantee by brute force over every scenario
 of f node deaths and pair deaths (which dominate single-worker deaths),
 and is the oracle the property tests check against.
@@ -86,37 +98,85 @@ class PartnerPlacement:
 
     # -- selection -----------------------------------------------------------
 
+    def _graph_node(self, rank: int):
+        """Graph node of a rank's representative (computational, else
+        replica) live worker; None off-graph."""
+        if self.graph is None:
+            return None
+        for w in (self.rmap.cmp.get(rank), self.rmap.rep.get(rank)):
+            if w is not None and w not in self.rmap.dead:
+                return self.topology.node_of(w) % self.graph.n_nodes
+        return None
+
+    def _push_links(self, r: int, q: int) -> Tuple:
+        """Links the representative owner->partner push path crosses."""
+        a, b = self._graph_node(r), self._graph_node(q)
+        if a is None or b is None or a == b:
+            return ()
+        return self.graph.links_on_path(a, b)
+
+    def _pick_least_contended(self, r: int, cands: List[int],
+                              load: Dict) -> int:
+        """Contention objective: the admissible candidate whose push path
+        minimizes the maximum weighted link load (each path deposits
+        1/link_share per link — an oversubscribed fat-tree up-link counts
+        for its oversubscription factor).  Ties keep shift order, so flat
+        graphs reproduce the unweighted scan exactly."""
+        best, best_cost = cands[0], None
+        for q in cands:
+            trial = dict(load)
+            for link in self._push_links(r, q):
+                trial[link] = trial.get(link, 0.0) \
+                    + 1.0 / self.graph.link_share(link)
+            cost = max(trial.values()) if trial else 0.0
+            if best_cost is None or cost < best_cost:
+                best, best_cost = q, cost
+        return best
+
     def _pick(self, r: int) -> Tuple[int, ...]:
         n = self.rmap.n
         own = self.domain(r)
         order = [(r + s) % n for s in range(1, n)]
+        dom = {q: self.domain(q) for q in order}
         chosen: List[int] = []
         domains: List[FrozenSet[int]] = []
-        for q in order:                         # pass 1: pairwise disjoint
-            d = self.domain(q)
-            if d & own or any(d & c for c in domains):
-                continue
+        load: Dict = {}                         # link -> weighted push load
+
+        def take(q: int) -> None:
             chosen.append(q)
-            domains.append(d)
-            if len(chosen) == self.k:
-                return tuple(chosen)
-        for q in order:                         # pass 2: owner-disjoint
-            if q in chosen or self.domain(q) & own:
-                continue
-            chosen.append(q)
-            if len(chosen) == self.k:
-                return tuple(chosen)
+            domains.append(dom[q])
+            if self.graph is not None:
+                for link in self._push_links(r, q):
+                    load[link] = load.get(link, 0.0) \
+                        + 1.0 / self.graph.link_share(link)
+
+        while len(chosen) < self.k:             # pass 1: pairwise disjoint
+            cands = [q for q in order
+                     if q not in chosen and not (dom[q] & own)
+                     and not any(dom[q] & c for c in domains)]
+            if not cands:
+                break
+            take(cands[0] if self.graph is None
+                 else self._pick_least_contended(r, cands, load))
+        while len(chosen) < self.k:             # pass 2: owner-disjoint
+            cands = [q for q in order
+                     if q not in chosen and not (dom[q] & own)]
+            if not cands:
+                break
+            take(cands[0] if self.graph is None
+                 else self._pick_least_contended(r, cands, load))
         for q in order:                         # pass 3: degraded
+            if len(chosen) == self.k:
+                break
             if q in chosen:
                 continue
             self.degraded = True
-            chosen.append(q)
-            if len(chosen) == self.k:
-                return tuple(chosen)
+            take(q)
         if not chosen:
             raise PlacementError(
                 f"rank {r}: no partner candidates in a {n}-rank world")
-        self.degraded = True
+        if len(chosen) < self.k:
+            self.degraded = True
         return tuple(chosen)
 
     # -- verification --------------------------------------------------------

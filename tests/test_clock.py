@@ -1,0 +1,386 @@
+"""repro.clock: the shared priced virtual-time engine.
+
+Covers the refactor's contracts:
+  * VirtualClock charge/advance semantics + the deduped horizon formula;
+  * parity (a): an FTSession under flat topology + default pricing
+    reproduces the pre-clock RunReport bitwise (states, event stream,
+    metrics, vtime) across injector scenarios — the priced ledger is
+    additive, never behavior-changing;
+  * parity (b): switchboard and tree/ring allreduce report
+    TimeBreakdown.comm from the SAME priced transport (the closed-form
+    estimate path exists only for policy layers with no transport);
+  * priced memstore C/R: an FTSession memory-backend checkpoint charges
+    measured push traffic, not the flat constant;
+  * SimRuntime and FTSession share one TimeBreakdown class/ledger;
+  * placement contention tie-break: flat graphs reproduce the unweighted
+    shift exactly; heterogeneous graphs spread cross-domain link load
+    without breaking the never-share-a-failure-domain invariant.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.clock import (COMPONENTS, TimeBreakdown, VirtualClock,
+                         injection_horizon, pricing_from_ft)
+from repro.comm import CollectiveEngine, NOTHING, ReplicaTransport
+from repro.configs.base import FTConfig
+from repro.core import ckpt_policy
+from repro.core.coordinator import ClusterTopology
+from repro.core.failure_sim import FailureEvent
+from repro.core.replica_map import ReplicaMap
+from repro.ft import FTSession, WeibullFailureInjector
+from repro.simrt import CostModel, SimRuntime
+from repro.simrt import TimeBreakdown as SimrtTimeBreakdown
+from repro.store import PartnerPlacement
+from repro.topo import SelectionPolicy, TopoCostModel, make_topo_ops, \
+    make_topology
+
+STEPS = 12
+
+
+# ------------------------------------------------------------ VirtualClock
+
+def test_clock_charge_and_advance():
+    clk = VirtualClock()
+    assert clk.charge("useful", 2.0) == 2.0
+    assert clk.now == 2.0 and clk.breakdown.useful == 2.0
+    clk.charge("ckpt_write", 0.5, advance=False)      # ledger-only
+    assert clk.now == 2.0 and clk.breakdown.ckpt_write == 0.5
+    clk.advance(1.0)
+    clk.advance_to(10.0)
+    assert clk.now == 10.0
+    assert clk.breakdown.total == 2.5
+    with pytest.raises(ValueError):
+        clk.charge("coffee", 1.0)
+    with pytest.raises(ValueError):
+        clk.charge("useful", -1.0)
+    assert set(COMPONENTS) == set(TimeBreakdown().as_dict()) - {"total"}
+
+
+def test_clock_comm_draining():
+    rmap = ReplicaMap(2, 0)
+    cm = TopoCostModel(make_topology("flat", 2), alpha_s=1e-3, beta_Bps=1e9)
+    cm.attach(ClusterTopology(2, 1))
+    t = ReplicaTransport(rmap, 2, cost_model=cm)
+    eps = {w: t.register(w) for w in rmap.alive()}
+    clk = VirtualClock(cost_model=cm)
+    t.send(eps[0], 1, 7, np.zeros(8), 0, log=True)
+    assert clk.drain_comm(t) > 0                       # discard, no charge
+    assert clk.breakdown.comm == 0.0
+    t.send(eps[0], 1, 7, np.zeros(8), 0, log=True)
+    dt = clk.charge_comm(t)
+    assert dt > 0 and clk.breakdown.comm == dt and clk.now == dt
+    assert clk.charge_comm(t) == 0.0                   # drained
+
+
+def test_injection_horizon_formula():
+    # the one copy of the formula both runtimes previously duplicated
+    assert injection_horizon(10, 1.0) == 20.0
+    assert injection_horizon(10, 2.0, 0.05) == 40.0 + 5.0
+    # SimRuntime passes its CostModel C; FTSession its FTConfig C (0 by
+    # default — its schedule clock does not advance on checkpoint writes)
+    c = CostModel()
+    assert injection_horizon(7, c.step_time_s, c.ckpt_cost_s) == \
+        7 * c.step_time_s * 2.0 + 100.0 * c.ckpt_cost_s
+
+
+def test_pricing_from_ft():
+    cluster = ClusterTopology(8, 2)
+    unpriced = pricing_from_ft(FTConfig(), cluster)
+    assert not unpriced.priced and unpriced.engine_ops is None
+    priced = pricing_from_ft(FTConfig(topology="fattree", topo_alpha=1e-5),
+                             cluster)
+    assert priced.priced and priced.graph.n_nodes == cluster.n_nodes
+    assert priced.cost_model.alpha_s == 1e-5
+    assert priced.cost_model.node_of_worker(3) == cluster.node_of(3)
+
+
+# -------------------------------------- parity (a): FTSession flat == pre
+
+class CounterWorkload:
+    disk_checkpointable = False
+
+    def init_state(self):
+        return {"x": np.float64(1.0), "hist": np.zeros(4)}
+
+    def step(self, state, t):
+        x = state["x"] * 1.0000001 + np.sin(0.1 * t)
+        hist = np.roll(state["hist"], 1)
+        hist[0] = x
+        return {"x": x, "hist": hist}, float(x)
+
+
+def _session(mode, injector, *, topology, ckpt_interval=0.0,
+             backend="disk"):
+    return FTSession(ft=FTConfig(mode=mode, ckpt_interval_s=ckpt_interval,
+                                 ckpt_backend=backend, topology=topology),
+                     injector=injector, n_logical_workers=8,
+                     workers_per_node=4)
+
+
+SCENARIOS = [
+    ("none", lambda: None, {}),
+    ("none", lambda: {3: [0]}, {}),                       # scratch restart
+    ("replication", lambda: {5: [0]}, {}),                # promotion
+    ("replication", lambda: WeibullFailureInjector(mtbf_s=4.0, seed=2), {}),
+    ("replication", lambda: [FailureEvent(5.5, (0,))], {}),   # timed
+    ("combined", lambda: {4: [1], 8: [9]},                # pair death
+     dict(ckpt_interval=4.0, backend="memory")),
+    ("checkpoint", lambda: {7: [2]},
+     dict(ckpt_interval=3.0, backend="memory")),
+]
+
+
+@pytest.mark.parametrize("mode,injector,kw", SCENARIOS)
+def test_ftsession_flat_topology_parity_bitwise(mode, injector, kw):
+    """Flat topology + default pricing reproduces the unpriced (pre-clock)
+    RunReport bitwise: states, metrics, event stream, counters, and the
+    vtime trajectory — the priced ledger adds information, never behavior."""
+    runs = {}
+    for topology in (None, "flat"):
+        session = _session(mode, injector(), topology=topology, **kw)
+        rep = session.run(CounterWorkload(), STEPS)
+        runs[topology] = (session, rep)
+    (s0, r0), (s1, r1) = runs[None], runs["flat"]
+    assert r0.final_state["x"] == r1.final_state["x"]
+    np.testing.assert_array_equal(r0.final_state["hist"],
+                                  r1.final_state["hist"])
+    assert r0.metrics == r1.metrics
+    assert [(e.step, e.kind, e.detail) for e in r0.events] == \
+        [(e.step, e.kind, e.detail) for e in r1.events]
+    for f in ("steps", "failures", "promotions", "restarts", "ckpt_writes",
+              "rolled_back_steps"):
+        assert getattr(r0, f) == getattr(r1, f), f
+    # the schedule clock is the pre-clock vtime float loop, bitwise:
+    # exactly step_time_s per executed step, nothing else
+    assert s0.clock.now == s1.clock.now == len(r0.metrics) * 1.0
+    # ...and the ledger splits that into useful + rollback exactly
+    assert r0.time.useful + r0.time.rollback == s0.clock.now
+    assert r0.time.useful == r1.time.useful
+    assert r0.time.rollback == r1.time.rollback
+    assert r0.time.comm == r1.time.comm == 0.0   # no priced fan-out here
+
+
+def test_ftsession_breakdown_components():
+    _, rep = None, _session("combined", {4: [1], 8: [9]}, topology=None,
+                            ckpt_interval=4.0,
+                            backend="memory").run(CounterWorkload(), STEPS)
+    assert rep.time.useful == STEPS * 1.0
+    assert rep.time.rollback == rep.rolled_back_steps * 1.0
+    assert rep.time.ckpt_write > 0 and rep.ckpt_writes > 0
+    assert rep.time.restore > 0 and rep.restarts == 1
+    assert rep.time.repair > 0 and rep.failures == 2
+    assert 0 < rep.efficiency < 1
+
+
+def test_shared_timebreakdown_class():
+    """One ledger class everywhere: simrt re-exports repro.clock's."""
+    assert SimrtTimeBreakdown is TimeBreakdown
+    _, rep = None, _session("none", None,
+                            topology=None).run(CounterWorkload(), 2)
+    assert isinstance(rep.time, TimeBreakdown)
+
+
+# --------------------------------- priced memstore C/R in an FTSession
+
+def test_ftsession_memstore_priced_checkpoint():
+    """With FTConfig.topology set, a memory-backend checkpoint charges the
+    α‑β-priced push traffic the save generated — measured, not the flat
+    closed-form constant — and the priced C responds to the graph."""
+    reps = {}
+    for topology, alpha in ((None, None), ("flat", None),
+                            ("flat-slow", 1e-3)):
+        ft = FTConfig(mode="combined", ckpt_interval_s=4.0,
+                      ckpt_backend="memory",
+                      topology=topology and "flat",
+                      topo_alpha=alpha or FTConfig.topo_alpha)
+        session = FTSession(ft=ft, injector={4: [1], 8: [9]},
+                            n_logical_workers=8, workers_per_node=4)
+        rep = session.run(CounterWorkload(), STEPS)
+        backend = session.strategy.backend
+        reps[topology] = (session, rep, backend)
+        assert rep.restarts == 1          # identical failure behavior
+    _, rep_flat, be_flat = reps["flat"]
+    _, rep_none, be_none = reps[None]
+    _, rep_slow, be_slow = reps["flat-slow"]
+    # unpriced: the closed-form constant (per-process network-bound C;
+    # committed_bytes tracks the last commit so compare loosely)
+    blob_per_rank = be_none.store.committed_bytes / 8
+    assert be_none.last_write_s == pytest.approx(
+        ckpt_policy.memstore_ckpt_cost(blob_per_rank, n_partners=2,
+                                       n_messages=4), rel=1e-3)
+    # priced: measured from push traffic — nonzero and not the constant
+    assert be_flat.last_write_s > 0
+    assert be_flat.last_write_s != pytest.approx(be_none.last_write_s)
+    assert rep_flat.time.ckpt_write > 0
+    # measured, so it responds to the cost model: 10x the per-hop latency
+    # -> strictly costlier pushes on the same graph and placement
+    assert be_slow.last_write_s > be_flat.last_write_s
+    assert rep_slow.time.ckpt_write > rep_flat.time.ckpt_write
+    # the priced restore (fetch traffic) lands in the ledger too; surviving
+    # ranks may serve locally, so >= 0, while the restart itself is counted
+    assert rep_flat.time.restore >= 0 and rep_flat.restarts == 1
+    # pricing never changes semantics: states stay bitwise-identical
+    assert rep_flat.final_state["x"] == rep_none.final_state["x"]
+    assert rep_slow.final_state["x"] == rep_none.final_state["x"]
+
+
+# ------------------- parity (b): switchboard comm via priced transport
+
+def _engine_world(n, ops=None, alpha=1e-6, beta=12.5e9):
+    rmap = ReplicaMap(n, 0)
+    cm = TopoCostModel(make_topology("flat", n), alpha_s=alpha,
+                       beta_Bps=beta)
+    cm.attach(ClusterTopology(n, 1))
+    transport = ReplicaTransport(rmap, n, cost_model=cm)
+    engine = CollectiveEngine(transport, ops=ops)
+    eps = {w: transport.register(w) for w in rmap.alive()}
+    return cm, transport, engine, eps
+
+
+def _drive(engine, eps, op_of):
+    engine.begin_step()
+    pend = {w: engine.post(ep, op_of(w), 0) for w, ep in eps.items()}
+    got = {}
+    for _ in range(10_000):
+        for w, ep in eps.items():
+            if w in got:
+                continue
+            out = engine.resolve(ep, pend[w])
+            if out is not NOTHING:
+                got[w] = out
+        if len(got) == len(eps):
+            return got
+    raise AssertionError("collective did not complete")
+
+
+def test_switchboard_allreduce_charges_priced_transport():
+    """The switchboard allreduce books one phantom message per peer
+    through the SAME priced transport the p2p algorithms use; on a flat
+    graph the charge equals the closed-form dense/switchboard estimator
+    (which remains only for callers with no transport)."""
+    n, value = 4, np.ones(1024)
+    cm, transport, engine, eps = _engine_world(n)     # default registry
+    got = _drive(engine, eps, lambda w: ("allreduce", value, "sum"))
+    np.testing.assert_array_equal(got[0], value * n)
+    comm = transport.take_comm_time()
+    assert comm == pytest.approx(
+        cm.collective_time("allreduce", "switchboard", n, value.nbytes))
+
+
+def test_switchboard_and_ring_report_comm_from_same_transport():
+    """Switchboard vs ring allreduce: both comm charges flow through the
+    priced transport, so they are directly comparable — and the ring's
+    bandwidth-optimal schedule wins for large payloads."""
+    n, value = 4, np.ones(1 << 20)                    # 8 MB vector
+    _, t_sw, engine_sw, eps_sw = _engine_world(n)
+    _drive(engine_sw, eps_sw, lambda w: ("allreduce", value, "sum"))
+    sw = t_sw.take_comm_time()
+
+    ops = make_topo_ops(SelectionPolicy(small_msg_bytes=1))   # force ring
+    _, t_ring, engine_ring, eps_ring = _engine_world(n, ops=ops)
+    got = _drive(engine_ring, eps_ring, lambda w: ("allreduce", value,
+                                                   "sum"))
+    ring = t_ring.take_comm_time()
+    np.testing.assert_array_equal(got[0], value * n)
+    assert sw > 0 and ring > 0
+    assert ring < sw                 # 2(n-1)·s/n bytes vs (n-1)·s per rank
+
+
+def test_switchboard_barrier_charges_latency_round():
+    n = 4
+    cm, transport, engine, eps = _engine_world(n, alpha=1e-4)
+    got = _drive(engine, eps, lambda w: ("barrier",))
+    assert all(v is None for v in got.values())
+    comm = transport.take_comm_time()
+    # zero-byte sync: (n-1) one-hop messages of pure latency per worker
+    assert comm == pytest.approx((n - 1) * 1e-4)
+
+
+def test_switchboard_unpriced_transport_charges_nothing():
+    rmap = ReplicaMap(3, 0)
+    transport = ReplicaTransport(rmap, 3)             # no cost model
+    engine = CollectiveEngine(transport)
+    eps = {w: transport.register(w) for w in rmap.alive()}
+    _drive(engine, eps, lambda w: ("allreduce", np.ones(4), "sum"))
+    assert transport.take_comm_time() == 0.0
+
+
+def test_simrt_switchboard_comm_counted():
+    """End-to-end: a non-pow2 world's scalar allreduce selects the
+    switchboard, whose charge now lands in TimeBreakdown.comm (it was 0
+    before the clock refactor)."""
+    class ScalarAllreduce:
+        n_ranks = 5                                   # non-pow2 -> switchboard
+
+        def init_state(self, rank):
+            return {"acc": 0.0}
+
+        def step(self, rank, state, t):
+            total = yield ("allreduce", [float(rank + t)], "sum")
+            return {"acc": state["acc"] + sum(total)}
+
+    ft = FTConfig(mode="none", topology="flat")
+    rt = SimRuntime(ScalarAllreduce(), ft, workers_per_node=2)
+    res = rt.run(3)
+    assert res.time.comm > 0
+    assert res.time.comm == pytest.approx(rt.t - res.time.useful)
+    assert res.time is rt.clock.breakdown             # one ledger object
+
+
+# ------------------------------------- placement contention tie-break
+
+@given(n=st.integers(3, 12), k=st.integers(1, 3), wpn=st.integers(1, 4),
+       replicated=st.sampled_from([0, 1]))
+@settings(max_examples=40, deadline=None)
+def test_placement_flat_graph_reproduces_unweighted_shift(n, k, wpn,
+                                                          replicated):
+    """On a flat graph every cross-node path is symmetric, so the
+    contention tie-break degenerates to the original shift order exactly."""
+    rmap_a = ReplicaMap(n, n * replicated)
+    rmap_b = ReplicaMap(n, n * replicated)
+    cluster = ClusterTopology(rmap_a.world_size, wpn)
+    base = PartnerPlacement(rmap_a, cluster, k_partners=k)
+    flat = PartnerPlacement(rmap_b, cluster, k_partners=k,
+                            graph=make_topology("flat", cluster.n_nodes))
+    for r in range(n):
+        assert base.partners_of(r) == flat.partners_of(r)
+    assert base.degraded == flat.degraded
+
+
+def test_placement_torus_spreads_push_directions():
+    """1-D torus ring, k=2: the unweighted shift piles both partners onto
+    the owner's +x link; the contention objective routes the second push
+    the other way around the ring."""
+    n = 8
+    cluster = ClusterTopology(n, 1)
+    graph = make_topology("torus3d", n, dims=(n, 1, 1))
+    base = PartnerPlacement(ReplicaMap(n, 0), cluster, k_partners=2)
+    tied = PartnerPlacement(ReplicaMap(n, 0), cluster, k_partners=2,
+                            graph=graph)
+    assert base.partners_of(0) == (1, 2)              # both over link (0,1)
+    first, second = tied.partners_of(0)
+    assert first == 1                                 # shift order on ties
+    links1 = set(graph.links_on_path(0, 1))
+    links2 = set(graph.links_on_path(0, second))
+    assert not links1 & links2                        # disjoint push paths
+
+
+def test_placement_tiebreak_keeps_domain_invariant():
+    """The tie-break reorders only equally-admissible candidates: shards
+    still never share a failure domain with their owner, and the
+    brute-force tolerance oracle is not weakened vs the unweighted pick."""
+    for name, kw in (("fattree", {"radix": 2}),
+                     ("dragonfly", {"group_size": 2}), ("torus3d", {})):
+        n = 8
+        cluster = ClusterTopology(2 * n, 2)           # replicated world
+        graph = make_topology(name, cluster.n_nodes, **kw)
+        rmap = ReplicaMap(n, n)
+        pl = PartnerPlacement(rmap, cluster, k_partners=2, graph=graph)
+        base = PartnerPlacement(ReplicaMap(n, n), cluster, k_partners=2,
+                                graph=None)
+        for r in range(n):
+            own = pl.domain(r)
+            for q in pl.partners_of(r):
+                assert not (pl.domain(q) & own)
+        assert pl.tolerance() >= base.tolerance()
