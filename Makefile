@@ -2,7 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint check bench bench-smoke bench-store bench-topo bench-clock
+.PHONY: test lint analyze mypy check bench bench-smoke bench-store \
+    bench-topo bench-clock
 
 test:
 	$(PY) -m pytest -x -q
@@ -15,7 +16,19 @@ lint:
 	    && $(PY) -m flake8 --max-line-length 100 src tests \
 	    || echo "flake8 not installed; compileall-only lint"
 
-check: lint test
+# repro.analyze: determinism/FT lint over src/repro + static schedule
+# verification of the three paper apps (docs/analyze_api.md). Numpy-only.
+analyze:
+	$(PY) -m repro.analyze
+
+# mypy over the typed core packages (mypy.ini un-ignores repro.clock,
+# repro.topo, repro.analyze); skipped where mypy isn't installed.
+mypy:
+	@$(PY) -c "import mypy" 2>/dev/null \
+	    && $(PY) -m mypy --config-file mypy.ini src/repro \
+	    || echo "mypy not installed; skipping type check"
+
+check: lint analyze mypy test
 
 # -m so the benchmarks package resolves from the repo root
 bench:

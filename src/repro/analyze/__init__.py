@@ -1,0 +1,39 @@
+"""repro.analyze — correctness analysis for the replicated simulator.
+
+Three passes over three different artifacts (see docs/analyze_api.md):
+
+  schedule   static ISP/MUST-style match verification of per-rank op
+             schedules (declared, or traced from live apps): unmatched
+             sends/recvs, wait-for deadlock cycles, collective
+             mismatches, reserved-tag abuse, wildcard match ambiguity
+  lint       AST rules over src/repro enforcing the determinism/FT
+             invariants replication rests on (wall clock, unseeded RNG,
+             set iteration order, unpriced transports, tag bands), with
+             ``# repro: allow[rule]`` suppression
+  divergence runtime cmp-vs-rep payload CRC comparison per send-ID —
+             the first-divergence SDC tripwire
+             (SimRuntime(detect_divergence=True))
+
+CLI: ``python -m repro.analyze`` (also ``make analyze``) lints the tree
+and schedule-verifies the three paper apps; exit status 1 on any error
+finding.  Everything on the import path is numpy-only.
+"""
+from repro.analyze.divergence import (DivergenceDetector, DivergenceRecord,
+                                      ReplicaDivergence, payload_crc)
+from repro.analyze.findings import (ERROR, Finding, WARNING, errors,
+                                    format_report, warnings)
+from repro.analyze.lint import RULES, lint_paths, lint_source, parse_allows
+from repro.analyze.schedule import (Schedule, trace_app, verify_app,
+                                    verify_schedule)
+from repro.analyze.tags import (RESERVED_BANDS, RESERVED_MAX, RESERVED_MIN,
+                                band_owner, reserved_tags)
+
+__all__ = [
+    "ERROR", "WARNING", "Finding", "errors", "warnings", "format_report",
+    "RULES", "lint_paths", "lint_source", "parse_allows",
+    "Schedule", "trace_app", "verify_app", "verify_schedule",
+    "RESERVED_BANDS", "RESERVED_MIN", "RESERVED_MAX", "band_owner",
+    "reserved_tags",
+    "DivergenceDetector", "DivergenceRecord", "ReplicaDivergence",
+    "payload_crc",
+]

@@ -1,0 +1,57 @@
+"""The reserved message-tag space, in one queryable place.
+
+Transport collectives, the in-memory checkpoint store, and the topology
+collective algorithms each own a band of negative tags; applications must
+use tags >= 0 (docs/comm_api.md).  Both the schedule verifier (app ops
+matched against the live reserved set) and the lint pass (declared TAG_*
+constants checked against the bands) read this table, so a new subsystem
+claiming tags updates exactly one registry.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+# (owner, lowest tag, highest tag) — inclusive bands, all negative.
+RESERVED_BANDS: Tuple[Tuple[str, int, int], ...] = (
+    ("repro.comm.collectives", -18, -11),
+    ("repro.store.memstore", -24, -21),
+    ("repro.topo.algorithms", -38, -31),
+)
+
+# the full reserved envelope apps must stay out of (paper-style contract:
+# app tags are non-negative; everything negative belongs to the runtime)
+RESERVED_MIN = min(lo for _, lo, _ in RESERVED_BANDS)
+RESERVED_MAX = max(hi for _, _, hi in RESERVED_BANDS)
+
+
+def band_owner(tag: int) -> Optional[str]:
+    """The subsystem owning ``tag``'s reserved band, or None."""
+    for owner, lo, hi in RESERVED_BANDS:
+        if lo <= tag <= hi:
+            return owner
+    return None
+
+
+def reserved_tags() -> Dict[int, str]:
+    """tag value -> "owner.TAG_NAME" for every tag the runtime actually
+    registers today (imported from the owning modules, so this cannot
+    drift from the implementation)."""
+    from repro.comm import collectives
+    from repro.store import memstore
+    from repro.topo import algorithms
+
+    out: Dict[int, str] = {}
+    for mod in (collectives, memstore, algorithms):
+        for name in dir(mod):
+            if name.startswith("TAG_") and isinstance(
+                    getattr(mod, name), int):
+                out[getattr(mod, name)] = f"{mod.__name__}.{name}"
+    return out
+
+
+def in_infra_module(path: str) -> bool:
+    """Whether a source path belongs to a subsystem allowed to declare
+    reserved (negative) tags."""
+    norm = path.replace("\\", "/")
+    return any(part in norm for part in
+               ("/comm/", "/store/", "/topo/"))

@@ -48,14 +48,19 @@ class Endpoint:
     """Per-worker communication state: the part of a worker the comm
     subsystem owns (the scheduler owns app state / generator / pending)."""
 
-    __slots__ = ("wid", "inbox", "cursor", "wc_consumed", "send_counters",
-                 "op_index")
+    __slots__ = ("wid", "inbox", "cursor", "wc_consumed", "wc_matches",
+                 "send_counters", "op_index")
 
     def __init__(self, wid: int):
         self.wid = wid
         self.inbox: deque = deque()          # LoggedMessage arrivals (FIFO)
         self.cursor = ReceiverCursor(wid)    # send-ID dedup cursor
         self.wc_consumed = 0                 # wildcard-order cursor
+        # every wildcard match this endpoint performed, as (src, tag,
+        # send_id) — recorded on BOTH roles so a cmp/rep pair's wildcard
+        # histories can be compared entry-by-entry (the send-ID pins the
+        # exact logged message each recv_any consumed)
+        self.wc_matches: List[Tuple[int, int, int]] = []
         # per-stream send-id counters: cmp and rep advance these identically
         # because they execute identical sends (paper §6.3)
         self.send_counters: Dict[Tuple[int, int, int], int] = {}
@@ -89,6 +94,11 @@ class ReplicaTransport:
         # with msg_cost_workers); None keeps the transport cost-free
         self.cost_model = cost_model
         self.comm_time: Dict[int, float] = {}   # sender wid -> accrued s
+        # optional send observer (repro.analyze.DivergenceDetector): called
+        # once per logical send with (role, src, dst, tag, send_id,
+        # payload, step) BEFORE role routing, so replica-side skipped
+        # sends are still observed
+        self.observer = None
 
     # ------------------------------------------------------------ lifecycle
 
@@ -161,6 +171,9 @@ class ReplicaTransport:
         stream = (src_rank, dst_rank, tag)
         sid = sender.send_counters.get(stream, 0)
         sender.send_counters[stream] = sid + 1
+        if self.observer is not None:
+            self.observer.on_send(role, src_rank, dst_rank, tag, sid,
+                                  payload, step)
         if role == "cmp":
             if log:
                 self.send_logs[src_rank].record(dst_rank, tag, payload,
@@ -204,14 +217,19 @@ class ReplicaTransport:
             if got is None:
                 return None
             ep.wc_consumed += 1
+            ep.wc_matches.append((got.src, got.tag, got.send_id))
             return got
         got = self._take(ep, src_rank, tag)
         if got is None:
             return None
         if src_rank is None and role == "cmp":
-            # record the chosen order and forward to the replica (paper §5)
+            # record the chosen order and forward to the replica (paper §5);
+            # the send-ID travels with the order entry, so the replica's
+            # match — and any offline correlation (repro.analyze) — pins
+            # the exact logged message, not just a (src, tag) stream
             self.wc_order[rank].append((got.src, got.tag, got.send_id))
             ep.wc_consumed += 1
+            ep.wc_matches.append((got.src, got.tag, got.send_id))
         return got
 
     def _take(self, ep: Endpoint, src_rank: Optional[int],
@@ -286,12 +304,14 @@ class ReplicaTransport:
             "send_log": self.send_logs[rank].state(),
             "wc_order": list(self.wc_order[rank]),
             "wc_consumed": ep.wc_consumed,
+            "wc_matches": list(ep.wc_matches),
             "send_counters": dict(ep.send_counters),
         }
 
     def load_rank(self, rank: int, ep: Endpoint, data: dict) -> None:
         ep.cursor.load_state(data["cursor"])
         ep.wc_consumed = data["wc_consumed"]
+        ep.wc_matches = list(data.get("wc_matches", ()))
         ep.send_counters = dict(data["send_counters"])
         self.send_logs[rank].load_state(data["send_log"])
         self.wc_order[rank] = list(data["wc_order"])

@@ -52,6 +52,7 @@ def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     in_specs = model_api.input_specs(cfg, shape)
     in_sh = shard_rules.input_shardings(in_specs, mesh, replication)
 
+    # repro: allow[wallclock] -- genuine wall measurement
     t0 = time.perf_counter()
     if shape.kind == "train":
         step, model = make_train_step(run)
@@ -100,10 +101,13 @@ def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
                 shard_rules.batch_axes(mesh, replication)):
             lowered = jitted.lower(abstract_params, cache_abs,
                                    in_specs["tokens"], in_specs["pos"])
+    # repro: allow[wallclock] -- genuine wall measurement
     t_lower = time.perf_counter() - t0
 
+    # repro: allow[wallclock] -- genuine wall measurement
     t0 = time.perf_counter()
     compiled = lowered.compile()
+    # repro: allow[wallclock] -- genuine wall measurement
     t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()

@@ -206,8 +206,10 @@ def main(argv=None):
                            topology=args.topology)
     prompts = np.random.default_rng(0).integers(
         0, srv.cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32)
+    # repro: allow[wallclock] -- genuine wall measurement
     t0 = time.perf_counter()
     toks = srv.generate(prompts, args.gen, kill_at=args.kill_at)
+    # repro: allow[wallclock] -- genuine wall measurement
     dt = time.perf_counter() - t0
     print(f"arch={args.arch} generated={toks.shape} "
           f"failures={srv.failures} promotions={srv.promotions} "

@@ -126,8 +126,10 @@ def main(argv=None):
     session, workload = build_session(
         args.arch, reduced=args.reduced, batch=args.batch, seq=args.seq,
         ft=ft, ckpt_dir=args.ckpt_dir, kill_schedule=kills, seed=args.seed)
+    # repro: allow[wallclock] -- genuine wall measurement
     t0 = time.perf_counter()
     rep = session.run(workload, args.steps)
+    # repro: allow[wallclock] -- genuine wall measurement
     dt = time.perf_counter() - t0
     print(f"arch={args.arch} mode={args.ft_mode} steps={rep.steps} "
           f"loss[first,last]=({rep.losses[0]:.4f},{rep.losses[-1]:.4f}) "

@@ -116,7 +116,8 @@ class SimRuntime:
                  failure_events: List[FailureEvent] = None,
                  injector=None,
                  respawn_on_restart: bool = True,
-                 drop_inflight_on_failure: bool = True):
+                 drop_inflight_on_failure: bool = True,
+                 detect_divergence: bool = False):
         self.app = app
         self.ft = ft
         self.n = app.n_ranks
@@ -166,6 +167,15 @@ class SimRuntime:
                                           ft.message_log_limit_bytes,
                                           cost_model=self.topo_costs)
         self.engine = CollectiveEngine(self.transport, ops=engine_ops)
+        # replica-divergence tripwire (repro.analyze): CRC-compare every
+        # cmp/rep send pair and raise at the first mismatch — silent
+        # replica drift becomes a located failure instead of a downstream
+        # bitwise miscompare
+        self.divergence = None
+        if detect_divergence:
+            from repro.analyze.divergence import DivergenceDetector
+            self.divergence = DivergenceDetector(
+                raise_on_divergence=True).attach(self.transport)
         # diskless checkpointing (repro.store): rank snapshots replicated
         # into partner memory over the same transport
         self.store = None
@@ -282,6 +292,10 @@ class SimRuntime:
         self.transport.rebind(self.rmap)
         if self.topo_costs is not None:
             self.topo_costs.attach(self.topology)
+        if self.divergence is not None:
+            # execution rewinds to the checkpoint: pre-rollback sends must
+            # not pair against post-rollback re-sends
+            self.divergence.reset()
         self.engine.world_changed()
         self.workers = {}
         for w in self.rmap.alive():
@@ -461,6 +475,7 @@ class SimRuntime:
     # ------------------------------------------------------------------- run
 
     def run(self, n_steps: int) -> RunResult:
+        # repro: allow[wallclock] -- genuine wall measurement
         wall0 = _time.perf_counter()
         if not self._injector_prepared:
             # horizon with slack: virtual time also advances on checkpoint
@@ -482,6 +497,7 @@ class SimRuntime:
             r: self.workers[self.rmap.cmp[r]].state for r in range(self.n)}
         self.result.replays = self.recovery.replays
         self.result.duplicates_skipped = self.transport.duplicates_skipped
+        # repro: allow[wallclock] -- genuine wall measurement
         self.result.wall_s = _time.perf_counter() - wall0
         if hasattr(self.app, "check"):
             self.result.check_value = self.app.check(self.result.states)

@@ -1,0 +1,414 @@
+"""repro.analyze: the schedule verifier against crafted pathological
+schedules and the live paper apps, the determinism lint rules (including
+``# repro: allow`` suppression round-trips), and the runtime replica-
+divergence detector catching a seeded single-bit flip at the first
+divergent send-ID."""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.analyze import (DivergenceDetector, ReplicaDivergence, errors,
+                           lint_paths, lint_source, payload_crc,
+                           reserved_tags, verify_app, verify_schedule,
+                           warnings)
+from repro.apps.cloverleaf import CloverLeaf
+from repro.apps.hpcg import HPCG, TAG_HALO
+from repro.apps.pic import PIC
+from repro.configs.base import FTConfig
+from repro.simrt import SimRuntime
+
+
+def rules(findings):
+    return {f.rule for f in findings}
+
+
+# ----------------------------------------------------------- schedule verify
+
+def test_clean_p2p_and_collective_schedule():
+    v = None
+    sched = {
+        0: [("send", 1, 5, v), ("recv", 1, 6),
+            ("allreduce", v, "sum"), ("allreduce", v, "max"),
+            ("barrier",), ("bcast", v, 0), ("gather", v, 1),
+            ("allgather", v), ("alltoall", [v, v]),
+            ("reduce_scatter", [v, v], "sum"), ("scan", v, "sum"),
+            ("neighbor_allgather", v, (1,)),
+            ("neighbor_alltoall", [v], (1,)),
+            ("exchange", {1: v}, 7)],
+        1: [("recv", 0, 5), ("send", 0, 6, v),
+            ("allreduce", v, "sum"), ("allreduce", v, "max"),
+            ("barrier",), ("bcast", v, 0), ("gather", v, 1),
+            ("allgather", v), ("alltoall", [v, v]),
+            ("reduce_scatter", [v, v], "sum"), ("scan", v, "sum"),
+            ("neighbor_allgather", v, (0,)),
+            ("neighbor_alltoall", [v], (0,)),
+            ("exchange", {0: v}, 7)],
+    }
+    assert verify_schedule(sched, 2) == []
+
+
+def test_unmatched_send_located_at_sender():
+    fs = verify_schedule({0: [("send", 1, 5, None)], 1: []}, 2,
+                         label="t")
+    assert rules(fs) == {"unmatched-send"}
+    (f,) = fs
+    assert f.path == "t rank 0" and f.line == 1
+
+
+def test_unmatched_recv_when_no_sender_remains():
+    fs = verify_schedule({0: [("recv", 1, 5)], 1: []}, 2)
+    assert rules(fs) == {"unmatched-recv"}
+
+
+def test_head_to_head_recv_deadlock_cycle():
+    sched = {
+        0: [("recv", 1, 0), ("send", 1, 0, None)],
+        1: [("recv", 0, 0), ("send", 0, 0, None)],
+    }
+    fs = verify_schedule(sched, 2)
+    assert rules(fs) == {"deadlock"}
+    (f,) = fs
+    assert "ranks [0, 1]" in f.message
+
+
+def test_collective_kind_and_redop_mismatch_deadlock():
+    # rank 1 calls barrier where rank 0 calls allreduce
+    fs = verify_schedule({0: [("allreduce", None, "sum")],
+                          1: [("barrier",)]}, 2)
+    assert rules(fs) & {"deadlock", "collective-mismatch"}
+    # same kind, different redop: different switchboard instances
+    fs = verify_schedule({0: [("allreduce", None, "sum")],
+                          1: [("allreduce", None, "max")]}, 2)
+    assert rules(fs) & {"deadlock", "collective-mismatch"}
+
+
+def test_missing_collective_participant():
+    fs = verify_schedule({0: [("barrier",)], 1: []}, 2)
+    assert rules(fs) == {"collective-mismatch"}
+
+
+def test_asymmetric_neighbor_list_detected():
+    # rank 0 lists rank 1 as a neighbor; rank 1 never reciprocates
+    fs = verify_schedule({0: [("neighbor_allgather", None, (1,))],
+                          1: []}, 2)
+    assert {"unmatched-recv", "unmatched-send"} <= rules(fs)
+
+
+def test_malformed_chunks_and_neighbors():
+    fs = verify_schedule({0: [("alltoall", [None])],
+                          1: [("alltoall", [None])]}, 2)
+    assert "collective-mismatch" in rules(fs)
+    fs = verify_schedule({0: [("neighbor_alltoall", [None, None], (1,))],
+                          1: [("neighbor_alltoall", [None], (0,))]}, 2)
+    assert "collective-mismatch" in rules(fs)
+
+
+def test_reserved_tag_use_reported_with_owner():
+    fs = verify_schedule({0: [("send", 1, -11, None)],
+                          1: [("recv", 0, -11)]}, 2)
+    assert "tag-reserved" in rules(fs)
+    assert any("repro.comm.collectives" in f.message for f in fs)
+    fs = verify_schedule({0: [("send", 1, -21, None)],
+                          1: [("recv", 0, -21)]}, 2)
+    assert any("repro.store.memstore" in f.message for f in fs)
+
+
+def test_wildcard_ambiguity_is_a_warning():
+    sched = {
+        0: [("recv_any", 7), ("recv_any", 7)],
+        1: [("send", 0, 7, None)],
+        2: [("send", 0, 7, None)],
+    }
+    fs = verify_schedule(sched, 3)
+    assert errors(fs) == []
+    assert rules(warnings(fs)) == {"wildcard-ambiguity"}
+
+
+def test_single_source_wildcard_is_clean():
+    sched = {0: [("recv_any", 7)], 1: [("send", 0, 7, None)]}
+    assert verify_schedule(sched, 2) == []
+
+
+def test_paper_app_schedules_verify_clean():
+    for app in (HPCG(n_ranks=4, nx=4, ny=4, nz=4),
+                PIC(n_ranks=4), CloverLeaf(n_ranks=4)):
+        assert verify_app(app, steps=2) == []
+
+
+def test_reserved_registry_matches_bands():
+    from repro.analyze import band_owner
+    for tag, name in reserved_tags().items():
+        owner = band_owner(tag)
+        assert owner is not None and name.startswith(owner), (tag, name)
+
+
+# --------------------------------------------------------------------- lint
+
+def test_lint_wallclock_and_alias_resolution():
+    fs = lint_source("import time\nt0 = time.perf_counter()\n")
+    assert rules(fs) == {"wallclock"}
+    fs = lint_source("import time as _t\nt0 = _t.time()\n")
+    assert rules(fs) == {"wallclock"}
+    fs = lint_source("from time import perf_counter\nt0 = perf_counter()\n")
+    assert rules(fs) == {"wallclock"}
+
+
+def test_lint_suppression_same_line_and_above():
+    base = "import time\n"
+    line = "t0 = time.perf_counter()"
+    assert lint_source(base + line + "  # repro: allow[wallclock]\n") == []
+    assert lint_source(base + "# repro: allow[wallclock]\n" + line
+                       + "\n") == []
+    assert lint_source(base + "# repro: allow[*]\n" + line + "\n") == []
+    # wrong rule id does not suppress
+    assert rules(lint_source(
+        base + line + "  # repro: allow[set-order]\n")) == {"wallclock"}
+
+
+def test_lint_unseeded_rng():
+    fs = lint_source("import numpy as np\nx = np.random.rand(3)\n")
+    assert rules(fs) == {"unseeded-rng"}
+    fs = lint_source("import random\nx = random.random()\n")
+    assert rules(fs) == {"unseeded-rng"}
+    fs = lint_source("import numpy as np\nr = np.random.default_rng()\n")
+    assert rules(fs) == {"unseeded-rng"}
+    # seeded generators are the sanctioned idiom
+    assert lint_source(
+        "import numpy as np\nr = np.random.default_rng(0)\n") == []
+    assert lint_source("import random\nr = random.Random(7)\n") == []
+    # methods on a generator instance are fine
+    assert lint_source("import numpy as np\n"
+                       "r = np.random.default_rng(0)\nx = r.random()\n"
+                       ) == []
+
+
+def test_lint_set_iteration_order():
+    fs = lint_source("s = {1, 2}\nfor x in s:\n    pass\n")
+    assert rules(fs) == {"set-order"}
+    fs = lint_source("xs = [p for p in {1, 2}]\n")
+    assert rules(fs) == {"set-order"}
+    fs = lint_source("s = set([1, 2])\nxs = list(s)\n")
+    assert rules(fs) == {"set-order"}
+    # order-insensitive consumers are fine
+    assert lint_source("s = {1, 2}\nfor x in sorted(s):\n    pass\n") == []
+    assert lint_source("s = {1, 2}\nn = len(s)\nm = max(s)\n") == []
+    assert lint_source("s = {1, 2}\nxs = sorted(list(s))\n") == []
+
+
+def test_lint_unpriced_transport():
+    src = ("from repro.comm.transport import ReplicaTransport\n"
+           "t = ReplicaTransport(rmap, 4)\n")
+    assert rules(lint_source(src)) == {"unpriced-transport"}
+    assert lint_source(
+        "from repro.comm.transport import ReplicaTransport\n"
+        "t = ReplicaTransport(rmap, 4, cost_model=cm)\n") == []
+
+
+def test_lint_tag_band_membership():
+    # infra module leaving the reserved envelope
+    fs = lint_source("TAG_BOGUS = -99\n", "src/repro/comm/fake.py")
+    assert rules(fs) == {"tag-range"}
+    # app module claiming a reserved tag
+    fs = lint_source("TAG_HALO = -11\n", "src/repro/apps/fake.py")
+    assert rules(fs) == {"tag-range"}
+    assert any("repro.comm.collectives" in f.message for f in fs)
+    # legitimate declarations
+    assert lint_source("TAG_HALO = 1\n", "src/repro/apps/fake.py") == []
+    assert lint_source("TAG_X = -12\n", "src/repro/comm/fake.py") == []
+
+
+def test_lint_tag_collision_across_files(tmp_path):
+    comm = tmp_path / "comm"
+    comm.mkdir()
+    (comm / "a.py").write_text("TAG_A = -11\n")
+    (comm / "b.py").write_text("TAG_B = -11\n")
+    fs = lint_paths([str(tmp_path)])
+    assert rules(fs) == {"tag-range"}
+    assert any("collides" in f.message for f in fs)
+    # a suppressed declaration does not collide
+    (comm / "b.py").write_text(
+        "TAG_B = -11  # repro: allow[tag-range]\n")
+    assert lint_paths([str(tmp_path)]) == []
+
+
+def test_repo_tree_lints_clean():
+    """The acceptance property behind ``make analyze``: src/repro carries
+    no unsuppressed violations."""
+    import os
+
+    import repro
+    root = os.path.dirname(os.path.abspath(repro.__file__))
+    assert lint_paths([root]) == []
+
+
+@settings(max_examples=30, deadline=None)
+@given(allowed=st.lists(st.sampled_from(
+    ["wallclock", "unseeded-rng", "set-order", "unpriced-transport",
+     "tag-range", "*"]), min_size=0, max_size=3),
+    same_line=st.booleans())
+def test_lint_suppression_round_trip(allowed, same_line):
+    annot = "# repro: allow[" + ",".join(allowed) + "]"
+    line = "t0 = time.perf_counter()"
+    if same_line:
+        src = f"import time\n{line}  {annot}\n"
+    else:
+        src = f"import time\n{annot}\n{line}\n"
+    fs = [f for f in lint_source(src) if f.rule == "wallclock"]
+    suppressed = "wallclock" in allowed or "*" in allowed
+    assert (fs == []) == suppressed
+
+
+# --------------------------------------------------------------- divergence
+
+class PingApp:
+    """Two ranks swap their state vector every step — every byte of state
+    crosses the transport, so any divergence is observable immediately."""
+
+    def __init__(self, n_ranks: int = 2):
+        self.n_ranks = n_ranks
+
+    def init_state(self, rank: int) -> dict:
+        return {"v": np.arange(4, dtype=np.float64) + rank}
+
+    def step(self, rank, state, t):
+        peer = 1 - rank
+        yield ("send", peer, 0, state["v"])
+        got = yield ("recv", peer, 0)
+        return {"v": state["v"] + got}
+
+
+def _replicated_runtime(app, **kw):
+    ft = FTConfig(mode="replication", replication_degree=1.0, mtbf_s=1e9)
+    return SimRuntime(app, ft, detect_divergence=True, **kw)
+
+
+def _flip_bit(arr: np.ndarray, index) -> None:
+    raw = arr.view(np.uint64)
+    raw[index] ^= np.uint64(1)
+
+
+def test_payload_crc_canonicalization():
+    a = np.arange(8, dtype=np.float64)
+    b = a.copy()
+    assert payload_crc(a) == payload_crc(b)
+    _flip_bit(b, 3)
+    assert payload_crc(a) != payload_crc(b)
+    # shape and dtype participate
+    assert payload_crc(a) != payload_crc(a.reshape(2, 4))
+    assert payload_crc(a) != payload_crc(a.astype(np.float32))
+    # container structure participates; dict key order does not
+    assert payload_crc([1, 2]) != payload_crc((1, 2))
+    assert payload_crc({"x": 1, "y": 2}) == payload_crc({"y": 2, "x": 1})
+    assert payload_crc(None) != payload_crc(0)
+
+
+def test_bit_flip_caught_at_first_divergent_send():
+    rt = _replicated_runtime(PingApp())
+    _flip_bit(rt.workers[rt.rmap.rep[0]].state["v"], 0)
+    with pytest.raises(ReplicaDivergence) as exc:
+        rt.run(1)
+    rec = exc.value.record
+    assert (rec.src, rec.dst, rec.tag, rec.send_id) == (0, 1, 0, 0)
+    assert rt.divergence.first == rec
+
+
+def test_bit_flip_in_hpcg_halo_caught():
+    rt = _replicated_runtime(HPCG(n_ranks=2, nx=4, ny=4, nz=4))
+    # corrupt the halo plane rank 0's replica sends to rank 1
+    _flip_bit(rt.workers[rt.rmap.rep[0]].state["p"], (0, 0, -1))
+    with pytest.raises(ReplicaDivergence) as exc:
+        rt.run(2)
+    rec = exc.value.record
+    assert (rec.src, rec.dst, rec.tag, rec.send_id) == (0, 1, TAG_HALO, 0)
+
+
+def test_clean_replicated_run_compares_and_stays_silent():
+    rt = _replicated_runtime(HPCG(n_ranks=2, nx=4, ny=4, nz=4))
+    rt.run(3)
+    assert rt.divergence.divergences == []
+    assert rt.divergence.compared > 0
+
+
+def test_detector_collect_mode_and_findings():
+    det = DivergenceDetector(raise_on_divergence=False)
+    a = np.arange(4, dtype=np.float64)
+    b = a.copy()
+    _flip_bit(b, 1)
+    det.on_send("cmp", 0, 1, 3, 0, a, 0)
+    det.on_send("rep", 0, 1, 3, 0, b, 0)
+    det.on_send("cmp", 0, 1, 3, 1, a, 0)
+    det.on_send("rep", 0, 1, 3, 1, a, 0)
+    assert len(det.divergences) == 1 and det.compared == 2
+    rec = det.first
+    assert rec.send_id == 0 and rec.cmp_crc == payload_crc(a) \
+        and rec.rep_crc == payload_crc(b)
+    (f,) = det.findings("demo")
+    assert f.rule == "replica-divergence" and "send_id=0" in f.message
+
+
+class HubApp:
+    """Rank 0 drains wildcard receives from every peer."""
+
+    TAG = 9
+
+    def __init__(self, n_ranks: int = 3):
+        self.n_ranks = n_ranks
+
+    def init_state(self, rank: int) -> dict:
+        return {"acc": np.zeros(2)}
+
+    def step(self, rank, state, t):
+        if rank == 0:
+            acc = state["acc"]
+            for _ in range(self.n_ranks - 1):
+                src, payload = yield ("recv_any", self.TAG)
+                acc = acc + payload * (src + 1)
+            total = yield ("bcast", acc, 0)
+        else:
+            yield ("send", 0, self.TAG, np.full(2, float(rank + t)))
+            total = yield ("bcast", None, 0)
+        return {"acc": total}
+
+
+def test_wildcard_matches_metadata_pins_send_ids():
+    rt = _replicated_runtime(HubApp(3), workers_per_node=2)
+    rt.run(2)
+    cmp_ep = rt.transport.endpoints[rt.rmap.cmp[0]]
+    rep_ep = rt.transport.endpoints[rt.rmap.rep[0]]
+    # both roles recorded the identical (src, tag, send_id) history,
+    # which is exactly the cmp-chosen wc_order stream
+    assert cmp_ep.wc_matches == rep_ep.wc_matches
+    assert cmp_ep.wc_matches == rt.transport.wc_order[0]
+    assert len(cmp_ep.wc_matches) == 2 * 2        # (n-1) matches x steps
+    for src, tag, sid in cmp_ep.wc_matches:
+        assert tag == HubApp.TAG and src in (1, 2) and sid >= 0
+
+
+def test_wc_matches_snapshot_roundtrip_and_legacy_load():
+    rt = _replicated_runtime(HubApp(3), workers_per_node=2)
+    rt.run(1)
+    ep = rt.transport.endpoints[rt.rmap.cmp[0]]
+    snap = rt.transport.snapshot_rank(0, ep)
+    assert snap["wc_matches"] == ep.wc_matches
+    ep.wc_matches = []
+    rt.transport.load_rank(0, ep, snap)
+    assert ep.wc_matches == snap["wc_matches"]
+    legacy = {k: v for k, v in snap.items() if k != "wc_matches"}
+    rt.transport.load_rank(0, ep, legacy)
+    assert ep.wc_matches == []
+
+
+# ---------------------------------------------------------------------- CLI
+
+def test_cli_schedule_pass_exits_clean(capsys):
+    from repro.analyze.__main__ import main
+    assert main(["schedule", "--steps", "1"]) == 0
+    out = capsys.readouterr().out
+    assert "0 error(s)" in out
+
+
+def test_cli_lint_detects_violation(tmp_path):
+    from repro.analyze.__main__ import main
+    bad = tmp_path / "bad.py"
+    bad.write_text("import time\nt = time.time()\n")
+    assert main(["lint", "--path", str(bad)]) == 1
