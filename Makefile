@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test lint analyze mypy check bench bench-smoke bench-store \
-    bench-topo bench-clock
+    bench-topo bench-clock bench-scale
 
 test:
 	$(PY) -m pytest -x -q
@@ -49,3 +49,8 @@ bench-topo:
 # the unified-clock TimeBreakdown across FTSession + SimRuntime (repro.clock)
 bench-clock:
 	$(PY) -m benchmarks.run --only clock_breakdown
+
+# simulator-core throughput ladder N=8192->131072 (docs/perf.md); writes
+# BENCH_scale.json. CI runs `--smoke --no-write` (N<=4096 floor check).
+bench-scale:
+	$(PY) -m benchmarks.bench_scale

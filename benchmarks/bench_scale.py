@@ -1,0 +1,269 @@
+"""bench-scale: simulator-core throughput at 8192 -> 131072 logical ranks.
+
+The workload is ``SparseHalo``, a deliberately communication-shaped app with
+the two patterns that stress the simulator core in opposite ways:
+
+  * a bulk halo ``exchange`` with the +-1 ring neighbours every step — cost
+    per step is proportional to messages moved, so it measures the
+    per-message constants (payload capture, matching, logging);
+  * a directional *sweep* (rank r receives a carry from r-1, adds its own
+    contribution, forwards to r+1) — a 1-D wavefront, the classic
+    pipelined-dependency pattern (SN transport sweeps).  Under a scheduler
+    that rescans every worker per pass this costs passes x workers =
+    O(N^2) attempts per step; under ready-queue scheduling it costs O(N).
+
+Each (N, mode) point runs in a forked child so peak RSS is measured per
+point (``resource.ru_maxrss``) and ladder points don't inherit each
+other's allocations.  Results are written to ``BENCH_scale.json`` at the
+repo root next to the committed ``pre_refactor`` baseline (measured on
+the pre-PR linear-scan transport, in-PR, before the refactor landed):
+
+    make bench-scale          # full ladder, rewrites current results
+    python -m benchmarks.bench_scale --smoke
+                              # N<=4096 in seconds; asserts the committed
+                              # smoke floor (>30%% regression fails: CI)
+
+Modes: ``none`` (N workers), ``replication`` (2N workers, §5 parallel
+routing), ``combined`` (2N workers + periodic in-memory checkpoints over
+the replicated store).  No failures are injected: this is the
+failure-free overhead regime the paper's negligible-overhead claim lives
+in — and the regime where the simulator itself must not be the
+bottleneck.  See docs/perf.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing as mp
+import os
+import resource
+import sys
+import time
+
+import numpy as np
+
+RESULT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_scale.json")
+
+TAG_HALO = 1
+TAG_SWEEP = 2
+
+# full ladder: issue target is 8192 -> 131072; smoke stays <= 4096
+LADDER = (8192, 32768, 131072)
+SMOKE_LADDER = (1024, 4096)
+MODES = ("none", "replication", "combined")
+SMOKE_FLOOR_FRACTION = 0.7          # >30% regression vs baseline fails
+
+
+class SparseHalo:
+    """Ring halo exchange + 1-D wavefront sweep; tiny deterministic state."""
+
+    def __init__(self, n_ranks: int, halo_floats: int = 64, seed: int = 0):
+        self.n_ranks = n_ranks
+        self.halo_floats = halo_floats
+        self.seed = seed
+
+    def init_state(self, rank: int) -> dict:
+        x = np.full(self.halo_floats, 1e-3 * (rank % 97), dtype=np.float64)
+        return {"x": x, "carry": 0.0}
+
+    def step(self, rank, state, step_idx):
+        n = self.n_ranks
+        x = state["x"]
+        nbrs = [q for q in (rank - 1, rank + 1) if 0 <= q < n]
+        halos = {}
+        if nbrs:
+            halos = yield ("exchange", {q: x for q in nbrs}, TAG_HALO)
+        acc = x.copy()
+        for q in nbrs:
+            acc += 1e-3 * halos[q]
+        # wavefront: the carry pipelines left -> right, one hop per rank
+        if rank > 0:
+            carry = yield ("recv", rank - 1, TAG_SWEEP)
+        else:
+            carry = float(step_idx)
+        if rank < n - 1:
+            yield ("send", rank + 1, TAG_SWEEP, carry + float(acc[0]) * 1e-6)
+        return {"x": acc, "carry": float(carry)}
+
+    def check(self, states) -> float:
+        return float(sum(s["carry"] for s in states.values()))
+
+
+def _run_point(n_ranks: int, mode: str, steps: int, halo_floats: int,
+               out_q) -> None:
+    """One (N, mode) measurement; runs in a forked child."""
+    from repro.configs.base import FTConfig
+    from repro.simrt import CostModel, SimRuntime
+
+    app = SparseHalo(n_ranks, halo_floats=halo_floats)
+    if mode == "combined":
+        # periodic in-memory checkpoints over the replicated store: the
+        # serialization path is part of what this bench regresses on
+        ft = FTConfig(mode="combined", replication_degree=1.0,
+                      ckpt_interval_s=float(max(2, steps // 2)),
+                      ckpt_backend="memory", store_partners=1,
+                      store_bands=2)
+    elif mode == "replication":
+        ft = FTConfig(mode="replication", replication_degree=1.0)
+    else:
+        ft = FTConfig(mode="none")
+    costs = CostModel(step_time_s=1.0, ckpt_cost_s=0.01,
+                      restore_cost_s=0.01)
+    rt = SimRuntime(app, ft, costs=costs, workers_per_node=4)
+    # repro: allow[wallclock] -- genuine wall measurement
+    t0 = time.perf_counter()
+    res = rt.run(steps)
+    # repro: allow[wallclock] -- genuine wall measurement
+    wall = time.perf_counter() - t0
+    rss_mib = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    out_q.put({
+        "n_ranks": n_ranks, "mode": mode, "steps": steps,
+        "wall_s": round(wall, 3),
+        "steps_per_s": round(steps / wall, 4) if wall > 0 else 0.0,
+        "rank_steps_per_s": round(steps * n_ranks / wall, 1)
+        if wall > 0 else 0.0,
+        "peak_rss_mib": round(rss_mib, 1),
+        "check_value": res.check_value,
+    })
+
+
+def measure(n_ranks: int, mode: str, steps: int,
+            halo_floats: int = 64) -> dict:
+    ctx = mp.get_context("fork")
+    q = ctx.Queue()
+    p = ctx.Process(target=_run_point,
+                    args=(n_ranks, mode, steps, halo_floats, q))
+    p.start()
+    out = q.get()
+    p.join()
+    return out
+
+
+def steps_for(n_ranks: int) -> int:
+    """Keep each point to a comparable op budget across the ladder."""
+    return max(2, (1 << 16) // max(n_ranks // 8, 1))
+
+
+def run_ladder(ladder, modes, *, halo_floats: int = 64,
+               verbose: bool = True, steps: int = None):
+    points = []
+    for n in ladder:
+        for mode in modes:
+            pt = measure(n, mode, steps or steps_for(n), halo_floats)
+            points.append(pt)
+            if verbose:
+                print(f"  N={n:>7} {mode:<12} {pt['steps_per_s']:>9.3f} "
+                      f"steps/s  {pt['rank_steps_per_s']:>12.0f} "
+                      f"rank-steps/s  rss {pt['peak_rss_mib']:.0f} MiB",
+                      file=sys.stderr)
+    return points
+
+
+def _load() -> dict:
+    if os.path.exists(RESULT_PATH):
+        with open(RESULT_PATH) as f:
+            return json.load(f)
+    return {}
+
+
+def _store(data: dict) -> None:
+    with open(RESULT_PATH, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def _key(pt: dict) -> str:
+    return f"{pt['n_ranks']}/{pt['mode']}"
+
+
+def record_pre_baseline(args) -> int:
+    """Measure the CURRENT transport as the pre-refactor reference (run
+    once, in-PR, before the perf work; kept committed for the ratio)."""
+    pts = run_ladder([args.n or 8192], MODES, steps=args.steps or 2)
+    data = _load()
+    data["pre_refactor"] = {_key(p): p for p in pts}
+    _store(data)
+    print(f"pre-refactor baseline recorded to {RESULT_PATH}")
+    return 0
+
+
+def smoke(args) -> int:
+    pts = run_ladder(SMOKE_LADDER, MODES)
+    data = _load()
+    floors = data.get("smoke", {})
+    data["smoke"] = {_key(p): p for p in pts}
+    if not args.no_write:
+        _store(data)
+    bad = []
+    for p in pts:
+        base = floors.get(_key(p))
+        if base is None:
+            continue
+        floor = SMOKE_FLOOR_FRACTION * base["steps_per_s"]
+        if p["steps_per_s"] < floor:
+            bad.append(f"{_key(p)}: {p['steps_per_s']:.3f} steps/s < "
+                       f"floor {floor:.3f} "
+                       f"(baseline {base['steps_per_s']:.3f})")
+    for line in bad:
+        print(f"REGRESSION {line}")
+    print(f"bench-scale --smoke: {len(pts)} points, "
+          f"{len(bad)} regression(s)")
+    return 1 if bad else 0
+
+
+def full(args) -> int:
+    ladder = [args.n] if args.n else list(LADDER)
+    pts = run_ladder(ladder, MODES)
+    data = _load()
+    results = data.setdefault("results", {})
+    results.update({_key(p): p for p in pts})
+    pre = data.get("pre_refactor", {})
+    for k, p in sorted(results.items()):
+        if k in pre and pre[k]["steps_per_s"] > 0:
+            ratio = p["steps_per_s"] / pre[k]["steps_per_s"]
+            data.setdefault("speedup_vs_pre", {})[k] = round(ratio, 2)
+    _store(data)
+    print(f"bench-scale: {len(pts)} points -> {RESULT_PATH}")
+    for k, r in sorted(data.get("speedup_vs_pre", {}).items()):
+        print(f"  speedup vs pre-refactor {k}: {r}x")
+    return 0
+
+
+def run():
+    """benchmarks.run entry: the smoke ladder as (name, us, derived) rows
+    without touching BENCH_scale.json."""
+    rows = []
+    for n in SMOKE_LADDER:
+        for mode in MODES:
+            pt = measure(n, mode, steps_for(n))
+            rows.append((f"bench_scale_{n}_{mode}",
+                         1e6 * pt["wall_s"] / pt["steps"],
+                         f"steps/s={pt['steps_per_s']} "
+                         f"check={pt['check_value']:.6f}"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="N<=4096 ladder; asserts the committed floor")
+    ap.add_argument("--record-pre-baseline", action="store_true",
+                    help="record the current transport as the pre-refactor "
+                         "reference (run before the perf refactor)")
+    ap.add_argument("--n", type=int, default=None,
+                    help="run a single ladder size instead of the default")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override the per-point step count")
+    ap.add_argument("--no-write", action="store_true",
+                    help="don't rewrite BENCH_scale.json (CI floor check)")
+    args = ap.parse_args(argv)
+    if args.record_pre_baseline:
+        return record_pre_baseline(args)
+    if args.smoke:
+        return smoke(args)
+    return full(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,98 @@
+"""Pin the deterministic outputs of the figure benchmarks.
+
+Every benchmark module returns ``(name, us_per_call, derived)`` rows; the
+``derived`` column is pure virtual-time arithmetic and must be bitwise
+stable across refactors of the simulator core (``us_per_call`` is wall
+time and is ignored).  This tool hashes the (name, derived) sequence per
+module:
+
+    python -m benchmarks.pin_digests --write    # capture to fig_digests.json
+    python -m benchmarks.pin_digests --check    # exit 1 on any drift
+
+The committed ``benchmarks/fig_digests.json`` was captured on the
+pre-refactor transport (PR 7); the perf overhaul (indexed matching,
+copy-on-write payloads, ready-queue scheduling — docs/perf.md) is
+required to keep every digest identical.  CI runs ``--check`` in the
+bench-smoke job.  Re-capture with ``--write`` ONLY for a change that is
+*supposed* to alter figure outputs, and say so in the commit.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import importlib
+import json
+import os
+import sys
+import time
+
+DIGEST_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "fig_digests.json")
+
+# the five figures the scale refactor must keep bitwise-identical
+MODULES = ["fig7_8_hpcg", "fig9_time_distribution", "fig13_log_replay",
+           "fig14_memstore", "fig15_topology"]
+
+
+def digest_rows(rows) -> str:
+    h = hashlib.sha256()
+    for name, _us, derived in rows:
+        h.update(str(name).encode())
+        h.update(b"\x00")
+        h.update(str(derived).encode())
+        h.update(b"\n")
+    return h.hexdigest()
+
+
+def capture(modules) -> dict:
+    out = {}
+    for name in modules:
+        # repro: allow[wallclock] -- progress reporting only
+        t0 = time.perf_counter()
+        mod = importlib.import_module(f"benchmarks.{name}")
+        rows = mod.run()
+        out[name] = digest_rows(rows)
+        # repro: allow[wallclock] -- progress reporting only
+        print(f"  {name}: {out[name][:16]}… "
+              f"({time.perf_counter() - t0:.1f}s, {len(rows)} rows)",
+              file=sys.stderr)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--write", action="store_true",
+                    help="capture current digests to fig_digests.json")
+    ap.add_argument("--check", action="store_true",
+                    help="compare current digests against the pinned file")
+    ap.add_argument("--only", action="append", default=None,
+                    help="restrict to named module(s)")
+    args = ap.parse_args(argv)
+    modules = args.only or MODULES
+    got = capture(modules)
+    if args.write:
+        pinned = {}
+        if os.path.exists(DIGEST_PATH):
+            with open(DIGEST_PATH) as f:
+                pinned = json.load(f)
+        pinned.update(got)
+        with open(DIGEST_PATH, "w") as f:
+            json.dump(pinned, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"pinned {len(got)} digest(s) -> {DIGEST_PATH}")
+        return 0
+    with open(DIGEST_PATH) as f:
+        pinned = json.load(f)
+    bad = [m for m in modules
+           if m in pinned and pinned[m] != got[m]]
+    missing = [m for m in modules if m not in pinned]
+    for m in bad:
+        print(f"DRIFT {m}: pinned {pinned[m][:16]}… != got {got[m][:16]}…")
+    for m in missing:
+        print(f"UNPINNED {m} (run --write)")
+    print(f"pin_digests: {len(modules) - len(bad)}/{len(modules)} match")
+    return 1 if (bad or missing) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

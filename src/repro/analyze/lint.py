@@ -25,6 +25,10 @@ those invariants as five rules over ``src/repro``:
                       (repro.analyze.tags.RESERVED_BANDS) or collide with
                       another declaration; app modules must not declare
                       negative tags at all
+  deepcopy            ``copy.deepcopy`` in ``src/repro/comm/`` hot paths:
+                      payloads are copy-on-write (frozen at send,
+                      repro.comm.payload), so a deepcopy per message is
+                      an O(payload) regression waiting to happen
 
 Suppression: a finding is suppressed by ``# repro: allow[rule]`` (comma
 separated rule ids; ``allow[*]`` allows everything) on the finding's line
@@ -48,7 +52,12 @@ RULES: Dict[str, str] = {
     "unpriced-transport": "ReplicaTransport constructed without a "
                           "cost_model",
     "tag-range": "reserved message-tag band violation or collision",
+    "deepcopy": "copy.deepcopy on a comm hot path (payloads are "
+                "copy-on-write)",
 }
+
+# the comm hot paths the deepcopy rule polices (path fragments)
+_DEEPCOPY_PATHS = ("repro/comm/",)
 
 _ALLOW_RE = re.compile(r"#\s*repro:\s*allow\[([^\]]*)\]")
 
@@ -267,6 +276,7 @@ class _Linter(ast.NodeVisitor):
             self._check_wallclock(node, dotted)
             self._check_rng(node, dotted)
             self._check_transport(node, dotted)
+            self._check_deepcopy(node, dotted)
         self._check_set_call(node)
         safe = isinstance(node.func, ast.Name) and \
             node.func.id in _ORDER_SAFE_CALLS
@@ -324,6 +334,20 @@ class _Linter(ast.NodeVisitor):
                    "pass cost_model= (repro.clock.pricing_from_ft), or "
                    "annotate a deliberately free transport with  "
                    "# repro: allow[unpriced-transport]")
+
+    def _check_deepcopy(self, node: ast.Call, dotted: str) -> None:
+        if dotted != "copy.deepcopy":
+            return
+        norm = self.path.replace(os.sep, "/")
+        if not any(frag in norm for frag in _DEEPCOPY_PATHS):
+            return
+        self._emit(node, "deepcopy",
+                   "copy.deepcopy on the comm hot path: payloads are "
+                   "copy-on-write (frozen at send), so this is an "
+                   "O(payload) copy per message",
+                   "share the frozen payload or use repro.comm.payload."
+                   "structural_copy; annotate a justified isolation copy "
+                   "with  # repro: allow[deepcopy]")
 
     def _check_set_call(self, node: ast.Call) -> None:
         """list(set(..)) / tuple(set(..)) / enumerate(set(..)) materialize

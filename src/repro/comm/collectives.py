@@ -47,11 +47,11 @@ rank back, or the collective deadlocks (exactly MPI's contract).
 """
 from __future__ import annotations
 
-import copy
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.comm.payload import structural_copy
 from repro.comm.transport import NOTHING, Endpoint, ReplicaTransport
 from repro.core.message_log import payload_nbytes
 
@@ -100,26 +100,26 @@ def reference_result(kind: str, votes: Dict[int, Any], rank: int, n: int,
     if kind == "allreduce":
         return combine(meta, [votes[r] for r in range(n)])
     if kind == "bcast":
-        return copy.deepcopy(votes[meta])
+        return structural_copy(votes[meta])
     if kind == "gather":
-        return [copy.deepcopy(votes[r]) for r in range(n)] \
+        return [structural_copy(votes[r]) for r in range(n)] \
             if rank == meta else None
     if kind == "allgather":
-        return [copy.deepcopy(votes[r]) for r in range(n)]
+        return [structural_copy(votes[r]) for r in range(n)]
     if kind == "reduce_scatter":
         return combine(meta, [votes[s][rank] for s in range(n)])
     if kind == "alltoall":
-        return [copy.deepcopy(votes[s][rank]) for s in range(n)]
+        return [structural_copy(votes[s][rank]) for s in range(n)]
     if kind == "scan":
         return combine(meta, [votes[s] for s in range(rank + 1)])
     if kind == "neighbor_allgather":
         # votes[src] = (value, neighbor list)
         _value, nbrs = votes[rank]
-        return [copy.deepcopy(votes[q][0]) for q in nbrs]
+        return [structural_copy(votes[q][0]) for q in nbrs]
     if kind == "neighbor_alltoall":
         # votes[src] = (chunks aligned with src's neighbor list, that list)
         _chunks, nbrs = votes[rank]
-        return [copy.deepcopy(votes[q][0][list(votes[q][1]).index(rank)])
+        return [structural_copy(votes[q][0][list(votes[q][1]).index(rank)])
                 for q in nbrs]
     raise ValueError(f"unknown collective {kind!r}")
 
@@ -192,7 +192,7 @@ class AllreduceOp(_SwitchboardOp):
         _, value, redop = op
         key = self._key(engine, ep, op, step)
         engine.contrib.setdefault(key, {})[(role, rank)] = \
-            copy.deepcopy(value)
+            structural_copy(value)
         self._charge_dense(engine, ep, rank, value)
         return ("collective", key, redop)
 
@@ -258,7 +258,7 @@ class BcastOp(_TransportOp):
             for dst in range(engine.n):
                 if dst != root:
                     self._send(engine, ep, role, dst, value, step)
-            return ("bcast_done", copy.deepcopy(value))
+            return ("bcast_done", structural_copy(value))
         return ("bcast_wait", root)
 
     def resolve(self, engine, ep, role, rank, pend):
@@ -276,7 +276,7 @@ class GatherOp(_TransportOp):
     def post(self, engine, ep, role, rank, op, step):
         _, value, root = op
         if rank == root:
-            return ("gather_wait", root, {root: copy.deepcopy(value)})
+            return ("gather_wait", root, {root: structural_copy(value)})
         self._send(engine, ep, role, root, value, step)
         return ("gather_done",)
 
@@ -312,7 +312,7 @@ class _ScatterWaitAllOp(_TransportOp):
             if dst != rank:
                 self._send(engine, ep, role, dst, chunks[dst], step)
         return (f"{self.kind}_wait", self._meta(op),
-                {rank: copy.deepcopy(chunks[rank])})
+                {rank: structural_copy(chunks[rank])})
 
     def _meta(self, op):
         return None
@@ -364,7 +364,7 @@ class AllgatherOp(_TransportOp):
         for dst in range(engine.n):
             if dst != rank:
                 self._send(engine, ep, role, dst, value, step)
-        return ("allgather_wait", None, {rank: copy.deepcopy(value)})
+        return ("allgather_wait", None, {rank: structural_copy(value)})
 
     def resolve(self, engine, ep, role, rank, pend):
         _, _meta, got = pend
@@ -391,7 +391,7 @@ class ScanOp(_TransportOp):
         _, value, redop = op
         for dst in range(rank + 1, engine.n):
             self._send(engine, ep, role, dst, value, step)
-        return ("scan_wait", redop, {rank: copy.deepcopy(value)})
+        return ("scan_wait", redop, {rank: structural_copy(value)})
 
     def resolve(self, engine, ep, role, rank, pend):
         _, redop, got = pend
@@ -588,7 +588,7 @@ class ReferenceCollectives:
         else:
             raise ValueError(f"unknown collective {kind!r}")
         if kind != "barrier":
-            value = copy.deepcopy(value)
+            value = structural_copy(value)
         self.contrib.setdefault(key, {})[rank] = value
         self.meta[key] = meta
         return ("collective", key)

@@ -1,0 +1,84 @@
+"""Copy-on-write payload capture for the transport hot path.
+
+The pre-PR transport deep-copied every payload twice per send (once for
+capture, once for the intercomm fill-in).  That is O(payload) per message
+and dominated the step cost at scale.  The CoW scheme replaces both
+copies with *freezing*:
+
+  * ``freeze_payload`` walks the payload once and sets
+    ``flags.writeable = False`` on every ndarray it contains.  The frozen
+    object is then shared — sender log, computational delivery, and
+    replica fill-in all reference the same payload;
+  * mutation attempts (by the sender after the send, or by a receiver on
+    a delivered payload) raise ``ValueError: assignment destination is
+    read-only`` instead of silently corrupting the log — the MPI contract
+    (buffers are immutable once handed to the library) made loud;
+  * a copy happens only when someone actually needs a writeable buffer:
+    checkpoint restore (``structural_copy`` with ``mutable=True``).
+
+``structural_copy`` is the checkpoint-time replacement for
+``copy.deepcopy``: it shares frozen (read-only) arrays, copies writeable
+ones with ``ndarray.copy`` (no deepcopy machinery), and falls back to
+``copy.deepcopy`` only for opaque objects.  See docs/perf.md.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Any
+
+import numpy as np
+
+
+def freeze_payload(payload: Any) -> Any:
+    """Freeze every ndarray reachable through dict/list/tuple containers
+    in place (``writeable = False``) and return the payload unchanged.
+
+    Freezing the array object itself means later in-place writes through
+    *this* object raise; writes through a different view of the same
+    buffer are not detected (sending a view of a buffer you keep mutating
+    is a bug under real MPI too)."""
+    if isinstance(payload, np.ndarray):
+        payload.flags.writeable = False
+        return payload
+    if type(payload) is dict:
+        for v in payload.values():
+            freeze_payload(v)
+        return payload
+    if type(payload) in (list, tuple):
+        for v in payload:
+            freeze_payload(v)
+        return payload
+    return payload
+
+
+def structural_copy(obj: Any, *, mutable: bool = False) -> Any:
+    """Snapshot-grade copy without deepcopy's memo machinery.
+
+    Read-only (frozen) arrays are shared — nobody can mutate them, so a
+    snapshot holding the same object is as isolated as a copy.  Writeable
+    arrays are copied with ``ndarray.copy``.  With ``mutable=True`` every
+    array in the result is an independent writeable copy (checkpoint
+    restore hands states back to apps that may mutate them in place).
+
+    Exact-type dict/list/tuple containers are rebuilt; subclasses and
+    any other object fall back to ``copy.deepcopy`` so semantics never
+    change for payloads the fast path does not understand."""
+    if isinstance(obj, np.ndarray):
+        if not mutable and not obj.flags.writeable:
+            return obj
+        return obj.copy()
+    t = type(obj)
+    if t is dict:
+        return {k: structural_copy(v, mutable=mutable)
+                for k, v in obj.items()}
+    if t is list:
+        return [structural_copy(v, mutable=mutable) for v in obj]
+    if t is tuple:
+        return tuple(structural_copy(v, mutable=mutable) for v in obj)
+    if obj is None or t in (int, float, bool, str, bytes, complex):
+        return obj
+    if isinstance(obj, np.generic):            # numpy scalars are immutable
+        return obj
+    # the one sanctioned fallback: opaque objects (subclasses, custom
+    # classes) keep full deepcopy semantics
+    return copy.deepcopy(obj)  # repro: allow[deepcopy]

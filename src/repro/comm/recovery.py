@@ -17,9 +17,6 @@ drain, which workers were promoted) stays with the runtime.
 """
 from __future__ import annotations
 
-import copy
-from collections import deque
-
 from repro.comm.transport import Endpoint, ReplicaTransport
 
 
@@ -43,21 +40,25 @@ class RecoveryManager:
     def drain_current_step(self, ep: Endpoint, step: int) -> None:
         """Drop in-flight messages of the current step (network loss during
         the repair window); older messages were already stable."""
-        ep.inbox = deque(m for m in ep.inbox if m.step < step)
+        ep.replace_messages(
+            [m for m in ep.live_messages() if m.step < step])
 
     def replay_to(self, ep: Endpoint) -> int:
         """Re-deliver logged messages this endpoint has not consumed.
         Returns the number of replayed messages."""
         t = self.transport
         _role, rank = t.role_of(ep)
-        have = {(m.src, m.dst, m.tag, m.send_id) for m in ep.inbox}
+        have = {(m.src, m.dst, m.tag, m.send_id)
+                for m in ep.live_messages()}
         n_replayed = 0
         for _src_rank, log in t.send_logs.items():
             for m in log.replay_for(rank, ep.cursor.expected):
                 key = (m.src, m.dst, m.tag, m.send_id)
                 if key in have:
                     continue
-                t.deliver(ep, copy.deepcopy(m))
+                # the logged message is immutable (frozen payload): it can
+                # be redelivered as-is, no defensive copy
+                t.deliver(ep, m)
                 n_replayed += 1
         self.replays += n_replayed
         return n_replayed

@@ -16,15 +16,25 @@ Owns the routing rules of FTHP-MPI's parallel communication scheme:
     consumes the same stream in the same order;
   * receiver-side send-ID cursors drop duplicates (exactly-once).
 
+Matching is indexed (docs/perf.md): every delivery lands in a
+per-(src, tag) FIFO bucket AND a per-tag arrival index, as one shared
+*cell* ``[message, arrival_seq, alive]``.  A directed receive pops its
+bucket head; a wildcard receive pops the earliest live cell of its tag —
+both O(1) — and consuming through either index just flips the cell's
+alive flag, which the other index skips lazily.  Payloads are captured
+copy-on-write (``repro.comm.payload``): ndarrays are frozen at send time
+and the single frozen message is shared by the sender log, the
+computational delivery, and the replica fill-in.
+
 The transport knows nothing about scheduling, virtual time, checkpoints,
 or failure policy — those live in the runtime and repro.comm.recovery.
 """
 from __future__ import annotations
 
-import copy
 from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.comm.payload import freeze_payload
 from repro.core.message_log import (LoggedMessage, ReceiverCursor, SenderLog,
                                     payload_nbytes)
 from repro.core.replica_map import ReplicaMap
@@ -46,25 +56,70 @@ _P2P_PENDING = frozenset({"recv", "recv_any", "exchange_wait"})
 
 class Endpoint:
     """Per-worker communication state: the part of a worker the comm
-    subsystem owns (the scheduler owns app state / generator / pending)."""
+    subsystem owns (the scheduler owns app state / generator / pending).
 
-    __slots__ = ("wid", "inbox", "cursor", "wc_consumed", "wc_matches",
+    Arrivals are indexed twice through shared cells (see module
+    docstring); ``inbox`` remains available as a read-only arrival-order
+    view for tests and debugging."""
+
+    __slots__ = ("wid", "buckets", "tag_index", "arrival_seq", "cursor",
+                 "wc_consumed", "wc_matches", "wc_matches_base",
                  "send_counters", "op_index")
 
     def __init__(self, wid: int):
         self.wid = wid
-        self.inbox: deque = deque()          # LoggedMessage arrivals (FIFO)
+        # (src, tag) -> deque of cells [msg, seq, alive]: directed FIFO
+        self.buckets: Dict[Tuple[int, int], deque] = {}
+        # tag -> deque of the same cells in arrival order: wildcard index
+        self.tag_index: Dict[int, deque] = {}
+        self.arrival_seq = 0
         self.cursor = ReceiverCursor(wid)    # send-ID dedup cursor
-        self.wc_consumed = 0                 # wildcard-order cursor
+        self.wc_consumed = 0                 # wildcard-order cursor (global)
         # every wildcard match this endpoint performed, as (src, tag,
         # send_id) — recorded on BOTH roles so a cmp/rep pair's wildcard
         # histories can be compared entry-by-entry (the send-ID pins the
-        # exact logged message each recv_any consumed)
+        # exact logged message each recv_any consumed).  Checkpoint
+        # boundaries trim the list; wc_matches_base is the consumed index
+        # of its first retained entry.
         self.wc_matches: List[Tuple[int, int, int]] = []
+        self.wc_matches_base = 0
         # per-stream send-id counters: cmp and rep advance these identically
         # because they execute identical sends (paper §6.3)
         self.send_counters: Dict[Tuple[int, int, int], int] = {}
         self.op_index = 0                    # collective-matching index
+
+    # -- arrival indexes ----------------------------------------------------
+
+    def admit(self, msg: LoggedMessage) -> None:
+        cell = [msg, self.arrival_seq, True]
+        self.arrival_seq += 1
+        b = self.buckets.get((msg.src, msg.tag))
+        if b is None:
+            b = self.buckets[(msg.src, msg.tag)] = deque()
+        b.append(cell)
+        t = self.tag_index.get(msg.tag)
+        if t is None:
+            t = self.tag_index[msg.tag] = deque()
+        t.append(cell)
+
+    def live_messages(self) -> List[LoggedMessage]:
+        """Unconsumed messages in arrival order (drain/replay/tests)."""
+        cells = [c for q in self.buckets.values() for c in q if c[2]]
+        cells.sort(key=lambda c: c[1])
+        return [c[0] for c in cells]
+
+    def replace_messages(self, msgs) -> None:
+        """Rebuild both indexes from ``msgs`` preserving the given order
+        (failure-time drain)."""
+        self.buckets = {}
+        self.tag_index = {}
+        self.arrival_seq = 0
+        for m in msgs:
+            self.admit(m)
+
+    @property
+    def inbox(self) -> List[LoggedMessage]:
+        return self.live_messages()
 
 
 class ReplicaTransport:
@@ -80,9 +135,13 @@ class ReplicaTransport:
         self.n = n_ranks
         self.send_logs = {r: SenderLog(r, log_limit_bytes)
                           for r in range(n_ranks)}
-        # rank -> [(src, tag, send_id)]: the cmp-chosen wildcard order
+        # rank -> [(src, tag, send_id)]: the cmp-chosen wildcard order.
+        # Checkpoint boundaries trim consumed prefixes; wc_base[rank] is
+        # the consumed index of the first retained entry, so endpoint
+        # cursors (wc_consumed) keep counting monotonically across trims.
         self.wc_order: Dict[int, List[Tuple[int, int, int]]] = \
             {r: [] for r in range(n_ranks)}
+        self.wc_base: Dict[int, int] = {r: 0 for r in range(n_ranks)}
         self.endpoints: Dict[int, Endpoint] = {}
         self.duplicates_skipped = 0
         # monotone delivery/consumption counter: multi-round collective
@@ -99,6 +158,10 @@ class ReplicaTransport:
         # payload, step) BEFORE role routing, so replica-side skipped
         # sends are still observed
         self.observer = None
+        # delivery wake hook: the ready-queue scheduler registers a
+        # callable(wid) and gets woken per delivery and per wildcard-order
+        # append (the two events that can unblock a parked worker)
+        self.waker: Optional[Callable[[int], None]] = None
 
     # ------------------------------------------------------------ lifecycle
 
@@ -121,8 +184,10 @@ class ReplicaTransport:
     # -------------------------------------------------------------- sending
 
     def deliver(self, ep: Endpoint, msg: LoggedMessage) -> None:
-        ep.inbox.append(msg)
+        ep.admit(msg)
         self.activity += 1
+        if self.waker is not None:
+            self.waker(ep.wid)
 
     def _charge(self, src_wid: int, dst_wid: int, nbytes: int) -> None:
         """Accrue the priced cost of one physical message on the sender
@@ -164,9 +229,15 @@ class ReplicaTransport:
 
     def send(self, sender: Endpoint, dst_rank: int, tag: int, payload,
              step: int, *, log: bool) -> None:
-        """Route one send per the paper's §5 parallel scheme."""
+        """Route one send per the paper's §5 parallel scheme.
+
+        The payload is captured copy-on-write: frozen in place (ndarray
+        ``writeable=False``) and shared by the log, the computational
+        delivery and the replica fill-in — no per-send deepcopy.  A sender
+        that mutates the object after the send gets a ValueError instead
+        of silent log corruption (the MPI buffer contract, made loud)."""
         role, src_rank = self.rmap.role_of(sender.wid)
-        payload = copy.deepcopy(payload)
+        payload = freeze_payload(payload)
         nbytes = payload_nbytes(payload) if self.cost_model is not None else 0
         stream = (src_rank, dst_rank, tag)
         sid = sender.send_counters.get(stream, 0)
@@ -183,11 +254,13 @@ class ReplicaTransport:
             self.deliver(self.endpoints[dst_wid], msg)
             if self.cost_model is not None:
                 self._charge(sender.wid, dst_wid, nbytes)
-            # intercomm fill-in: destination replicated, source not
+            # intercomm fill-in: destination replicated, source not — the
+            # replica consumes the SAME frozen message through its own
+            # cursor (CoW: nobody can write the shared payload)
             if self.rmap.rep[dst_rank] is not None and \
                     self.rmap.rep[src_rank] is None:
                 rep_wid = self.rmap.rep[dst_rank]
-                self.deliver(self.endpoints[rep_wid], copy.deepcopy(msg))
+                self.deliver(self.endpoints[rep_wid], msg)
                 if self.cost_model is not None:
                     self._charge(sender.wid, rep_wid, nbytes)
         else:  # replica sender
@@ -210,9 +283,10 @@ class ReplicaTransport:
         role, rank = self.rmap.role_of(ep.wid)
         if src_rank is None and role == "rep":
             order = self.wc_order[rank]
-            if ep.wc_consumed >= len(order):
+            idx = ep.wc_consumed - self.wc_base[rank]
+            if idx >= len(order):
                 return None
-            want_src, want_tag, _want_sid = order[ep.wc_consumed]
+            want_src, want_tag, _want_sid = order[idx]
             got = self._take(ep, want_src, want_tag)
             if got is None:
                 return None
@@ -230,20 +304,59 @@ class ReplicaTransport:
             self.wc_order[rank].append((got.src, got.tag, got.send_id))
             ep.wc_consumed += 1
             ep.wc_matches.append((got.src, got.tag, got.send_id))
+            # the order entry may be the only thing a parked replica
+            # twin was waiting on (its copy already arrived)
+            if self.waker is not None:
+                rep_wid = self.rmap.rep.get(rank)
+                if rep_wid is not None:
+                    self.waker(rep_wid)
         return got
 
     def _take(self, ep: Endpoint, src_rank: Optional[int],
               tag: int) -> Optional[LoggedMessage]:
-        for i, m in enumerate(ep.inbox):
-            if (src_rank is None or m.src == src_rank) and m.tag == tag:
-                if not ep.cursor.should_deliver(m):
-                    del ep.inbox[i]
-                    self.duplicates_skipped += 1
-                    return self._take(ep, src_rank, tag)
-                del ep.inbox[i]
-                self.activity += 1
-                return m
+        """Pop the next live match: the (src, tag) bucket head, or — for a
+        wildcard — the earliest arrival of the tag across sources.  The
+        duplicate skip is a loop (a replayed burst must not recurse)."""
+        if src_rank is None:
+            q = ep.tag_index.get(tag)
+        else:
+            q = ep.buckets.get((src_rank, tag))
+        if not q:
+            return None
+        while q:
+            cell = q.popleft()
+            if not cell[2]:
+                continue                     # consumed via the other index
+            cell[2] = False
+            m = cell[0]
+            if not ep.cursor.should_deliver(m):
+                self.duplicates_skipped += 1
+                continue
+            self.activity += 1
+            return m
         return None
+
+    def drain_tag(self, ep: Endpoint, tag: int) -> List[LoggedMessage]:
+        """Consume EVERY live message with ``tag``, ordered by (src,
+        arrival) — the order an explicit per-source match_recv scan would
+        produce — with the same send-ID dedup.  O(messages), not
+        O(sources): repro.store pumps its reserved tags through this."""
+        q = ep.tag_index.get(tag)
+        if not q:
+            return []
+        cells = [c for c in q if c[2]]
+        q.clear()
+        cells.sort(key=lambda c: (c[0].src, c[1]))
+        out = []
+        for cell in cells:
+            cell[2] = False
+            m = cell[0]
+            if not ep.cursor.should_deliver(m):
+                self.duplicates_skipped += 1
+                continue
+            self.activity += 1
+            out.append(m)
+        return out
 
     # -------------------------------------------------------- op intake/resolve
 
@@ -295,6 +408,29 @@ class ReplicaTransport:
 
     # ------------------------------------------------- checkpointable state
 
+    def trim_wildcards(self, rank: int) -> None:
+        """Checkpoint-boundary trim of the wildcard histories (the analogue
+        of SenderLog.trim_before_step): drop wc_order entries every live
+        endpoint of ``rank`` has consumed, and each endpoint's matching
+        wc_matches prefix.  Cursor offsets (wc_base / wc_matches_base)
+        keep the global consumed indexes intact, so replica replay and
+        repro.analyze correlation line up across trims."""
+        eps = [self.endpoints[w]
+               for w in (self.rmap.cmp.get(rank), self.rmap.rep.get(rank))
+               if w is not None and w in self.endpoints]
+        if not eps:
+            return
+        keep = min(ep.wc_consumed for ep in eps)
+        drop = keep - self.wc_base[rank]
+        if drop > 0:
+            del self.wc_order[rank][:drop]
+            self.wc_base[rank] = keep
+        for ep in eps:
+            mdrop = keep - ep.wc_matches_base
+            if mdrop > 0:
+                del ep.wc_matches[:mdrop]
+                ep.wc_matches_base = keep
+
     def snapshot_rank(self, rank: int, ep: Endpoint) -> dict:
         """The comm half of a rank-level checkpoint (paper §3.3): log,
         cursor, wildcard order, send counters — app state stays with the
@@ -303,8 +439,10 @@ class ReplicaTransport:
             "cursor": ep.cursor.state(),
             "send_log": self.send_logs[rank].state(),
             "wc_order": list(self.wc_order[rank]),
+            "wc_base": self.wc_base[rank],
             "wc_consumed": ep.wc_consumed,
             "wc_matches": list(ep.wc_matches),
+            "wc_matches_base": ep.wc_matches_base,
             "send_counters": dict(ep.send_counters),
         }
 
@@ -312,6 +450,8 @@ class ReplicaTransport:
         ep.cursor.load_state(data["cursor"])
         ep.wc_consumed = data["wc_consumed"]
         ep.wc_matches = list(data.get("wc_matches", ()))
+        ep.wc_matches_base = data.get("wc_matches_base", 0)
         ep.send_counters = dict(data["send_counters"])
         self.send_logs[rank].load_state(data["send_log"])
         self.wc_order[rank] = list(data["wc_order"])
+        self.wc_base[rank] = data.get("wc_base", 0)

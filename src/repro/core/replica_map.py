@@ -20,7 +20,7 @@ from the last checkpoint (ApplicationDead).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set
+from typing import Dict, List, Optional, Set, Tuple
 
 
 class ApplicationDead(Exception):
@@ -48,6 +48,12 @@ class ReplicaMap:
     rep: Dict[int, Optional[int]] = field(default_factory=dict)
     dead: Set[int] = field(default_factory=set)
     promotions: int = 0
+    # worker -> (role, rank) reverse index, maintained by every mutation:
+    # role_of is called once per send and once per worker per step, so a
+    # linear scan here turns the whole simulator O(N^2) regardless of how
+    # fast the transport is
+    _roles: Dict[int, Tuple[str, int]] = field(default_factory=dict,
+                                               repr=False, compare=False)
 
     def __post_init__(self):
         if not 0 <= self.m <= self.n:
@@ -56,6 +62,12 @@ class ReplicaMap:
             self.cmp = {r: r for r in range(self.n)}
             self.rep = {r: (self.n + r if r < self.m else None)
                         for r in range(self.n)}
+        self._roles = {}
+        for r in range(self.n):
+            if self.cmp[r] is not None:
+                self._roles[self.cmp[r]] = ("cmp", r)
+            if self.rep[r] is not None:
+                self._roles[self.rep[r]] = ("rep", r)
 
     # -- queries ------------------------------------------------------------
 
@@ -79,15 +91,10 @@ class ReplicaMap:
         return [r for r in range(self.n) if self.rep[r] is not None]
 
     def role_of(self, worker: int):
-        """-> ("cmp"|"rep", rank) or ("dead", -1)."""
+        """-> ("cmp"|"rep", rank) or ("dead", -1). O(1)."""
         if worker in self.dead:
             return ("dead", -1)
-        for r in range(self.n):
-            if self.cmp[r] == worker:
-                return ("cmp", r)
-            if self.rep[r] == worker:
-                return ("rep", r)
-        return ("dead", -1)
+        return self._roles.get(worker, ("dead", -1))
 
     def rank_alive(self, rank: int) -> bool:
         return self.cmp[rank] is not None
@@ -105,14 +112,7 @@ class ReplicaMap:
         if worker in self.dead:
             return {"kind": "noop", "worker": worker}
         self.dead.add(worker)
-        role, rank = ("dead", -1)
-        for r in range(self.n):
-            if self.cmp[r] == worker:
-                role, rank = "cmp", r
-                break
-            if self.rep[r] == worker:
-                role, rank = "rep", r
-                break
+        role, rank = self._roles.pop(worker, ("dead", -1))
         if role == "rep":
             self.rep[rank] = None
             return {"kind": "drop_replica", "worker": worker, "rank": rank}
@@ -125,6 +125,7 @@ class ReplicaMap:
             # if the replica had failed (paper wording)
             self.cmp[rank] = promoted
             self.rep[rank] = None
+            self._roles[promoted] = ("cmp", rank)
             self.promotions += 1
             return {"kind": "promote", "worker": worker, "rank": rank,
                     "promoted": promoted}
@@ -144,29 +145,36 @@ class ReplicaMap:
         pending = [w for w in workers if w not in self.dead]
         self.dead.update(pending)
         for w in pending:
-            for r in range(self.n):
-                if self.cmp[r] == w:
-                    promoted = self.rep[r]
-                    if promoted is not None and promoted in self.dead:
-                        promoted = None
-                    if promoted is None:
-                        self.cmp[r] = None
-                        self.rep[r] = None
-                        dead_ranks.append(r)
-                        events.append({"kind": "rank_dead", "worker": w,
-                                       "rank": r})
-                    else:
-                        self.cmp[r] = promoted
-                        self.rep[r] = None
-                        self.promotions += 1
-                        events.append({"kind": "promote", "worker": w,
-                                       "rank": r, "promoted": promoted})
-                    break
-                if self.rep[r] == w:
+            # a worker whose slot was already cleared by an earlier death in
+            # this batch (its rank went dead, or it was the doomed replica of
+            # a promoted rank) has no entry left — and, like the pre-index
+            # scan, produces no event of its own
+            role_rank = self._roles.pop(w, None)
+            if role_rank is None:
+                continue
+            role, r = role_rank
+            if role == "cmp":
+                promoted = self.rep[r]
+                if promoted is not None and promoted in self.dead:
+                    self._roles.pop(promoted, None)
+                    promoted = None
+                if promoted is None:
+                    self.cmp[r] = None
                     self.rep[r] = None
-                    events.append({"kind": "drop_replica", "worker": w,
+                    dead_ranks.append(r)
+                    events.append({"kind": "rank_dead", "worker": w,
                                    "rank": r})
-                    break
+                else:
+                    self.cmp[r] = promoted
+                    self.rep[r] = None
+                    self._roles[promoted] = ("cmp", r)
+                    self.promotions += 1
+                    events.append({"kind": "promote", "worker": w,
+                                   "rank": r, "promoted": promoted})
+            else:
+                self.rep[r] = None
+                events.append({"kind": "drop_replica", "worker": w,
+                               "rank": r})
         if dead_ranks:
             raise ApplicationDead(dead_ranks[0], events=events,
                                   dead_ranks=dead_ranks)

@@ -32,10 +32,11 @@ Apps (repro.apps.*) write worker-local code:
 """
 from __future__ import annotations
 
-import copy
+import heapq
 import os
 import pickle
 import time as _time
+from collections import deque
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
@@ -43,6 +44,7 @@ from repro.clock import (TimeBreakdown, VirtualClock, injection_horizon,
                          pricing_from_ft)
 from repro.comm import (NOTHING, CollectiveEngine, P2P_OPS, RecoveryManager,
                         ReplicaTransport)
+from repro.comm.payload import structural_copy
 from repro.comm.transport import Endpoint
 from repro.configs.base import FTConfig
 from repro.core import ckpt_policy
@@ -234,7 +236,9 @@ class SimRuntime:
         for r in range(self.n):
             w = self.workers[self.rmap.cmp[r]]
             snap["ranks"][r] = {
-                "state": copy.deepcopy(w.state),
+                # frozen (sent) arrays are shared, writeable ones copied —
+                # no deepcopy walk per checkpoint (repro.comm.payload)
+                "state": structural_copy(w.state),
                 **self.transport.snapshot_rank(r, w.ep),
             }
         return snap
@@ -266,8 +270,12 @@ class SimRuntime:
             c = topo_c if topo_c is not None else self._ckpt_c()
             self.clock.charge("ckpt_write", c)
             # checkpoint boundary: trim message logs (log removal component)
+            # and the wildcard-order histories (consumed prefixes; cursor
+            # offsets preserved so replay correlation still lines up)
             for log in self.transport.send_logs.values():
                 log.trim_before_step(self.step_idx)
+            for r in range(self.n):
+                self.transport.trim_wildcards(r)
             self.clock.charge("log_removal", self.costs.log_removal_cost_s)
         self.coords.restart_timer(self.clock.now)
 
@@ -328,7 +336,9 @@ class SimRuntime:
         for w, nw in self.workers.items():
             _role, rank = self.rmap.role_of(w)
             data = snap["ranks"][rank]
-            nw.state = copy.deepcopy(data["state"])
+            # independent writeable copies: the snapshot may be restored
+            # again, and apps mutate their state in place
+            nw.state = structural_copy(data["state"], mutable=True)
             self.transport.load_rank(rank, nw.ep, data)
 
         self.step_idx = snap["step"]
@@ -373,7 +383,28 @@ class SimRuntime:
     # ------------------------------------------------------------------ step
 
     def _run_step(self):
-        """Advance every alive worker through one application step."""
+        """Advance every alive worker through one application step.
+
+        Ready-queue scheduling: instead of rescanning every worker each
+        pass (O(passes x workers)), the step runs in *rounds* that attempt
+        only runnable workers, so cost scales with messages moved.  A
+        blocked worker parks and is woken by exactly the events that can
+        unblock it: a delivery to its endpoint (``transport.waker``), a
+        wildcard-order append for its rank, a contribution posted to the
+        collective it waits on, or a failure repair (wake-all — promotion
+        fallbacks and role-view invalidation can unblock anyone).
+
+        Rounds replay the old pass semantics bitwise: each round attempts
+        a set of workers in ascending wid order, each attempted worker
+        advances its generator at most once, and a wake for a
+        not-yet-attempted wid later in the current round joins this round
+        (the old scan would still have reached it), while any other wake
+        schedules the next round.  Since every worker the old scheduler
+        would have *advanced* is attempted here in the same round, the
+        global order of sends/receives — and therefore every wildcard
+        choice and virtual-time figure — is unchanged (docs/perf.md walks
+        the equivalence argument).
+        """
         app = self.app
         self.engine.begin_step()
         for w, worker in self.workers.items():
@@ -382,57 +413,115 @@ class SimRuntime:
             worker.pending = None
             worker.done = False
 
-        # failure events that land inside this step fire between passes
+        # failure events that land inside this step fire between rounds
         step_end = self.t + self.costs.step_time_s
-        pending_events = self._due_events(step_end)
-        pass_i = 0
+        pending_events = deque(self._due_events(step_end))
+        round_i = 0
 
-        def fire_events():
-            nonlocal pass_i
-            if pending_events and pass_i >= 1:
-                while pending_events:
-                    self._apply_failure(pending_events.pop(0))
+        # round state: ``curr`` is a min-heap of wids scheduled for the
+        # current round (a sorted list is a valid heap), ``nxt`` collects
+        # wids for the next round, ``attempted`` guards one-advance-per-
+        # round, ``current_wid`` is the scan cursor the wake rule compares
+        # against.  Parked collective waiters live in ``coll_waiters``
+        # keyed by the engine's match key.
+        curr = sorted(self.workers.keys())
+        in_curr = set(curr)
+        nxt: set = set()
+        attempted: set = set()
+        coll_waiters: Dict[tuple, set] = {}
+        current_wid = -1
 
-        while True:
-            progressed = False
-            activity0 = self.transport.activity
-            alive = list(self.workers.items())
-            for w, worker in alive:
-                if w not in self.workers or worker.done:
-                    continue
-                # resolve pending op if satisfiable
-                if worker.pending is None:
-                    send_val = None      # first resume
-                else:
-                    send_val = self._resolve(worker)
-                    if send_val is NOTHING:
+        def wake(wid):
+            if wid in in_curr:
+                return
+            if wid > current_wid and wid not in attempted:
+                heapq.heappush(curr, wid)
+                in_curr.add(wid)
+            else:
+                nxt.add(wid)
+
+        def wake_collective(key):
+            ws = coll_waiters.pop(key, None)
+            if ws:
+                for wid in ws:
+                    wake(wid)
+
+        self.transport.waker = wake
+        try:
+            while True:
+                progressed = False
+                activity0 = self.transport.activity
+                while curr:
+                    w = heapq.heappop(curr)
+                    in_curr.discard(w)
+                    current_wid = w
+                    attempted.add(w)
+                    worker = self.workers.get(w)
+                    if worker is None or worker.done:
                         continue
-                    worker.pending = None
-                # advance the generator
-                try:
-                    op = worker.gen.send(send_val)
-                    progressed = True
-                except StopIteration as stop:
-                    worker.state = stop.value if stop.value is not None \
-                        else worker.state
-                    worker.done = True
-                    progressed = True
-                    continue
-                worker.pending = self._intake(worker, op)
-                if worker.pending is None:
-                    progressed = True
-            pass_i += 1
-            fire_events()
-            live = [x for x in self.workers.values()]
-            if all(x.done for x in live):
-                break
-            if not progressed and self.transport.activity == activity0:
-                # no generator advanced AND no message moved: a resolve
-                # that consumes/forwards mid-schedule (tree/ring rounds)
-                # counts as progress even while still blocked
-                blocked = {x.wid: x.pending for x in live if not x.done}
-                raise RuntimeError(f"deadlock at step {self.step_idx}: "
-                                   f"{blocked}")
+                    if worker.pending is None:
+                        send_val = None      # first resume
+                    else:
+                        a0 = self.transport.activity
+                        send_val = self._resolve(worker)
+                        if send_val is NOTHING:
+                            pend = worker.pending
+                            if self.transport.activity != a0:
+                                # the resolve consumed/forwarded messages
+                                # mid-schedule (exchange partials, tree/
+                                # ring rounds): still blocked but live —
+                                # retry next round like the old rescan did
+                                nxt.add(w)
+                            elif pend[0] == "collective":
+                                coll_waiters.setdefault(pend[1],
+                                                        set()).add(w)
+                            # p2p waits park with no entry: the next
+                            # delivery (or wildcard-order append) wakes
+                            continue
+                        worker.pending = None
+                    try:
+                        op = worker.gen.send(send_val)
+                        progressed = True
+                    except StopIteration as stop:
+                        worker.state = stop.value if stop.value is not None \
+                            else worker.state
+                        worker.done = True
+                        progressed = True
+                        continue
+                    worker.pending = self._intake(worker, op)
+                    if worker.pending is not None and \
+                            worker.pending[0] == "collective":
+                        # this contribution may complete the collective
+                        # for workers already parked on it
+                        wake_collective(worker.pending[1])
+                    nxt.add(w)
+                round_i += 1
+                # wakes fired while events/repairs run (replay deliveries)
+                # belong to the next round, not the drained current heap
+                current_wid = float("inf")
+                if pending_events:
+                    world0 = len(self.workers)
+                    while pending_events:
+                        self._apply_failure(pending_events.popleft())
+                    if len(self.workers) != world0:
+                        # failures invalidate role views and can unblock
+                        # any collective via promotion fallback: wake all
+                        nxt.update(self.workers.keys())
+                live = list(self.workers.values())
+                if all(x.done for x in live):
+                    break
+                if not progressed and self.transport.activity == activity0:
+                    blocked = {x.wid: x.pending for x in live if not x.done}
+                    raise RuntimeError(f"deadlock at step {self.step_idx}: "
+                                       f"{blocked}")
+                curr = sorted(w for w in nxt if w in self.workers
+                              and not self.workers[w].done)
+                in_curr = set(curr)
+                nxt = set()
+                attempted = set()
+                current_wid = -1
+        finally:
+            self.transport.waker = None
 
         # step boundary is pinned to step_end even when mid-step repair
         # charges moved the clock (pre-clock behavior, kept bitwise)

@@ -33,6 +33,7 @@ kills mid-commit.  Restores pull shards back from surviving partners
 from __future__ import annotations
 
 import pickle
+import struct
 import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -68,12 +69,17 @@ class _ShardSet:
     def complete(self) -> bool:
         if len(self.bands) != self.n_bands:
             return False
-        return all(zlib.crc32(self.bands[b].tobytes()) == self.crcs[b]
+        # crc32 reads the array buffer directly — no tobytes() copy
+        return all(zlib.crc32(self.bands[b]) == self.crcs[b]
                    for b in range(self.n_bands))
 
-    def blob(self) -> bytes:
-        return b"".join(self.bands[b].tobytes()
-                        for b in range(self.n_bands))
+    def blob(self) -> np.ndarray:
+        """The reassembled byte stream as a uint8 view/concatenation
+        (``len`` and slicing behave like bytes; decode with
+        ``MemStore._decode``)."""
+        if self.n_bands == 1:
+            return self.bands[0]
+        return np.concatenate([self.bands[b] for b in range(self.n_bands)])
 
 
 class MemStore:
@@ -141,22 +147,89 @@ class MemStore:
         self.transport.send(ep, dst_rank, tag, payload, step, log=False)
 
     def _drain(self, ep, tag: int):
-        """Consume every message with ``tag`` from ``ep`` (explicit source
-        scan — the store never uses wildcard receives, which would disturb
-        the transport's MPI_ANY_SOURCE forwarding order)."""
-        out = []
-        for src in range(self.transport.n):
-            while True:
-                m = self.transport.match_recv(ep, src, tag)
-                if m is None:
-                    break
-                out.append(m)
-        return out
+        """Consume every message with ``tag`` from ``ep`` in (src, arrival)
+        order — the transport's indexed drain (the store never uses
+        wildcard receives, which would disturb the transport's
+        MPI_ANY_SOURCE forwarding order)."""
+        return self.transport.drain_tag(ep, tag)
 
     @staticmethod
     def _chunk(blob: bytes, n_bands: int) -> List[np.ndarray]:
         arr = np.frombuffer(blob, dtype=np.uint8)
         return [c.copy() for c in np.array_split(arr, n_bands)]
+
+    # -------------------------------------------------- banded serialization
+
+    def _encode(self, payload) -> Tuple[List[np.ndarray], int]:
+        """Serialize ``payload`` and band the byte stream in ONE copy.
+
+        Pickle protocol 5 hands every contiguous array buffer out-of-band
+        (``buffer_callback``), so large numpy state is never run through
+        the pickle stream itself; the parts are framed with a length
+        header and copied directly into ``n_bands`` read-only uint8 band
+        arrays (boundaries match ``np.array_split``).  The bands are
+        shared — owner-local retention and every partner push reference
+        the same frozen arrays, replacing the per-worker chunk copies of
+        the tobytes() era."""
+        bufs: List[pickle.PickleBuffer] = []
+        blob = pickle.dumps(payload, protocol=5, buffer_callback=bufs.append)
+        parts = [memoryview(blob)]
+        for b in bufs:
+            mv = memoryview(b)
+            if not mv.contiguous:
+                mv = memoryview(bytes(mv))
+            parts.append(mv.cast("B"))
+        header = struct.pack("<I", len(parts)) + b"".join(
+            struct.pack("<Q", p.nbytes) for p in parts)
+        parts.insert(0, memoryview(header))
+        total = sum(p.nbytes for p in parts)
+        base, extra = divmod(total, self.n_bands)
+        bands = []
+        it = iter(parts)
+        cur = next(it)
+        off = 0
+        for b in range(self.n_bands):
+            size = base + 1 if b < extra else base
+            band = np.empty(size, dtype=np.uint8)
+            filled = 0
+            while filled < size:
+                take = min(size - filled, cur.nbytes - off)
+                if take:
+                    band[filled:filled + take] = np.frombuffer(
+                        cur, dtype=np.uint8, count=take, offset=off)
+                    filled += take
+                    off += take
+                if off == cur.nbytes and filled < size:
+                    cur = next(it)
+                    off = 0
+            band.flags.writeable = False
+            bands.append(band)
+        return bands, total
+
+    @staticmethod
+    def _decode(data):
+        """Inverse of ``_encode``: parse the length header and unpickle
+        with the out-of-band buffers as views into the (writeable) byte
+        stream — restored arrays alias it instead of being copied out."""
+        if isinstance(data, (bytes, bytearray)):
+            # np.frombuffer over bytes would yield read-only views;
+            # restored states must be writeable
+            arr = np.frombuffer(bytearray(data), dtype=np.uint8)
+        else:
+            arr = np.ascontiguousarray(data)
+            if not arr.flags.writeable:
+                arr = arr.copy()
+        mv = memoryview(arr)
+        (nparts,) = struct.unpack_from("<I", mv, 0)
+        lengths = struct.unpack_from(f"<{nparts}Q", mv, 4)
+        pos = 4 + 8 * nparts
+        blob = mv[pos:pos + lengths[0]]
+        pos += lengths[0]
+        bufs = []
+        for length in lengths[1:]:
+            bufs.append(mv[pos:pos + length])
+            pos += length
+        return pickle.loads(blob, buffers=bufs)
 
     # ----------------------------------------------------------------- write
 
@@ -167,26 +240,26 @@ class MemStore:
         owners: Dict[int, dict] = {}
         total = 0
         for r in sorted(states):
-            blob = pickle.dumps(states[r], protocol=pickle.HIGHEST_PROTOCOL)
-            chunks = self._chunk(blob, self.n_bands)
-            crcs = tuple(zlib.crc32(c.tobytes()) for c in chunks)
+            bands, nbytes = self._encode(states[r])
+            crcs = tuple(zlib.crc32(b) for b in bands)
             partners = self.placement.partners_of(r)
             # a partner that is fully dead right now can never ack; it is
             # excluded from this generation's durability condition (the
             # next elastic restart re-levels the placement)
             expected = tuple(p for p in partners if self._rank_reachable(p))
             owners[r] = {"partners": partners, "expected": expected,
-                         "nbytes": len(blob), "crcs": crcs}
-            total += len(blob)
+                         "nbytes": nbytes, "crcs": crcs}
+            total += nbytes
             # owner-local retention: surviving ranks roll back from their
-            # own memory, only dead ranks pull from partners
+            # own memory, only dead ranks pull from partners — the bands
+            # are read-only and shared, not copied per worker
             rmap = self.transport.rmap
             for w in (rmap.cmp.get(r), rmap.rep.get(r)):
                 if w is None or w not in self.transport.endpoints:
                     continue
-                ss = _ShardSet(step, self.n_bands, len(blob), crcs)
-                for b, chunk in enumerate(chunks):
-                    ss.add(b, chunk.copy())
+                ss = _ShardSet(step, self.n_bands, nbytes, crcs)
+                for b, band in enumerate(bands):
+                    ss.add(b, band)
                 self.stores.setdefault(w, {})[(r, gen)] = ss
             for ep in self._rank_endpoints(r):
                 for p in expected:
@@ -196,8 +269,8 @@ class MemStore:
                     # of latency for no durability gain); the per-band
                     # CRCs travel inside the batched payload
                     self._send(ep, p, TAG_PUSH,
-                               ("push", r, gen, step, len(blob), crcs,
-                                chunks), step)
+                               ("push", r, gen, step, nbytes, crcs,
+                                bands), step)
                     self.pushes += 1
         self.last_save_bytes = total
         self.gens[gen] = {"step": step, "owners": owners,

@@ -63,8 +63,9 @@ class PartnerPlacement:
         self.k = k_partners
         self.degraded = False
         self._partners: Dict[int, Tuple[int, ...]] = {}
+        pick = self._pick_flat if graph is None else self._pick
         for r in range(rmap.n):
-            self._partners[r] = self._pick(r)
+            self._partners[r] = pick(r)
 
     def _domain_of_node(self, node: int) -> int:
         if self.graph is None:
@@ -132,6 +133,61 @@ class PartnerPlacement:
             if best_cost is None or cost < best_cost:
                 best, best_cost = q, cost
         return best
+
+    def _pick_flat(self, r: int) -> Tuple[int, ...]:
+        """Graph-free fast path: one forward scan per preference pass,
+        computing candidate domains lazily, so placement over N ranks is
+        ~O(N·k) instead of the restart-scan's O(N²).  Choices are
+        identical to ``_pick``: without a graph each pass takes
+        ``cands[0]``, and pass-1 admissibility only *shrinks* as chosen
+        domains grow — so the first admissible candidate of a fresh
+        rescan is always at or beyond the previous pick's shift position,
+        which is exactly what the forward scan takes next."""
+        n = self.rmap.n
+        own = self.domain(r)
+        dom: Dict[int, FrozenSet[int]] = {}
+        chosen: List[int] = []
+        domains: List[FrozenSet[int]] = []
+
+        def dom_of(q: int) -> FrozenSet[int]:
+            d = dom.get(q)
+            if d is None:
+                d = dom[q] = self.domain(q)
+            return d
+
+        for s in range(1, n):                   # pass 1: pairwise disjoint
+            if len(chosen) == self.k:
+                break
+            q = (r + s) % n
+            d = dom_of(q)
+            if not (d & own) and not any(d & c for c in domains):
+                chosen.append(q)
+                domains.append(d)
+        if len(chosen) < self.k:
+            for s in range(1, n):               # pass 2: owner-disjoint
+                if len(chosen) == self.k:
+                    break
+                q = (r + s) % n
+                if q in chosen or (dom_of(q) & own):
+                    continue
+                chosen.append(q)
+                domains.append(dom[q])
+        if len(chosen) < self.k:
+            for s in range(1, n):               # pass 3: degraded
+                if len(chosen) == self.k:
+                    break
+                q = (r + s) % n
+                if q in chosen:
+                    continue
+                self.degraded = True
+                chosen.append(q)
+                domains.append(dom_of(q))
+        if not chosen:
+            raise PlacementError(
+                f"rank {r}: no partner candidates in a {n}-rank world")
+        if len(chosen) < self.k:
+            self.degraded = True
+        return tuple(chosen)
 
     def _pick(self, r: int) -> Tuple[int, ...]:
         n = self.rmap.n

@@ -26,9 +26,10 @@ forwards worker deaths into the store so shard memory dies with its host.
 """
 from __future__ import annotations
 
-import pickle
 import zlib
 from typing import Dict, Optional, Tuple
+
+import numpy as np
 
 from repro.store.memstore import TAG_FETCH, TAG_FETCH_REPLY, MemStore
 
@@ -94,16 +95,16 @@ class StoreRecovery:
                                 ("band", owner, g, b, ss.bands[b]), step)
         # requester side: merge bands from both role endpoints, accepting
         # only chunks whose CRC matches the generation manifest
-        bands: Dict[int, bytes] = {}
+        bands: Dict[int, np.ndarray] = {}
         for ep in reqs:
             for m in store._drain(ep, TAG_FETCH_REPLY):
                 _, owner, g, b, chunk = m.payload
                 if owner == rank and g == gen and b not in bands and \
-                        zlib.crc32(chunk.tobytes()) == info["crcs"][b]:
+                        zlib.crc32(chunk) == info["crcs"][b]:
                     bands[b] = chunk
         if len(bands) < store.n_bands:
             return None
-        return b"".join(bands[b].tobytes() for b in range(store.n_bands))
+        return np.concatenate([bands[b] for b in range(store.n_bands)])
 
     def _salvage_rank(self, rank: int, gen: int, *, count: bool = True):
         """Direct read of any surviving complete copy (intercomm stand-in)."""
@@ -139,7 +140,7 @@ class StoreRecovery:
                 blob = self._salvage_rank(rank, gen)
             if blob is None or len(blob) != manifest[rank][2]:
                 raise StoreUnrecoverable(rank, gen)
-            states[rank] = pickle.loads(blob)
+            states[rank] = MemStore._decode(blob)
         return states, meta["step"]
 
     def recoverable(self, gen: Optional[int] = None) -> bool:

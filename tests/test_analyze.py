@@ -182,6 +182,23 @@ def test_lint_unseeded_rng():
                        ) == []
 
 
+def test_lint_deepcopy_on_comm_hot_path():
+    src = "import copy\ny = copy.deepcopy(x)\n"
+    fs = lint_source(src, path="src/repro/comm/transport.py")
+    assert rules(fs) == {"deepcopy"}
+    # alias resolution, like the other call rules
+    fs = lint_source("import copy as _c\ny = _c.deepcopy(x)\n",
+                     path="src/repro/comm/anything.py")
+    assert rules(fs) == {"deepcopy"}
+    # only the comm hot path is policed
+    assert lint_source(src, path="src/repro/simrt/runtime.py") == []
+    assert lint_source(src) == []
+    # explicit annotation is the escape hatch
+    assert lint_source(
+        "import copy\ny = copy.deepcopy(x)  # repro: allow[deepcopy]\n",
+        path="src/repro/comm/payload.py") == []
+
+
 def test_lint_set_iteration_order():
     fs = lint_source("s = {1, 2}\nfor x in s:\n    pass\n")
     assert rules(fs) == {"set-order"}

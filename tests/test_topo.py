@@ -396,7 +396,10 @@ def test_serve_batch_fanout_over_transport(replication):
     batch = np.arange(12, dtype=np.int32).reshape(3, 4)
     got = fan.fan_out(batch)
     np.testing.assert_array_equal(got, batch)
-    assert got is not batch                      # a transported copy
+    # copy-on-write transport: the received payload may be the very same
+    # array, but it is frozen at send time — nobody can mutate the served
+    # batch out from under the log/replica copy
+    assert not got.flags.writeable
     # the frontend's send was logged with send-IDs like any §6.3 message
     log = fan.transport.send_logs[BatchFanout.FRONTEND_RANK].log
     assert len(log) == 1 and log[0].dst == BatchFanout.SERVE_RANK

@@ -1,0 +1,279 @@
+"""PR 7 scale refactor: indexed matching, CoW payloads, wildcard-history
+trimming, and the pinned figure digests.
+
+Covers the contracts docs/perf.md documents:
+
+  * the duplicate skip in ``ReplicaTransport._take`` is a loop — a replayed
+    burst of 10k duplicates must drain without recursion;
+  * bucketed (src, tag) + per-tag matching is observably identical to the
+    old linear inbox scan: per-(src, tag) FIFO order and exactly-once
+    delivery under arbitrary send/recv/recv_any interleavings with
+    replay-style duplicate redelivery (property-tested);
+  * checkpoint boundaries trim ``wc_order``/``wc_matches`` behind a
+    consumed-cursor base so wildcard-heavy runs don't grow without bound,
+    while replica replay and repro.analyze correlation still line up;
+  * the figure benchmarks' derived columns are bitwise-identical to the
+    digests pinned on the pre-refactor transport
+    (benchmarks/fig_digests.json).
+"""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.comm.transport import ReplicaTransport
+from repro.configs.base import FTConfig
+from repro.core.failure_sim import FailureEvent
+from repro.core.message_log import LoggedMessage
+from repro.core.replica_map import ReplicaMap
+from repro.simrt import CostModel, SimRuntime
+
+from _hypothesis_compat import given, settings, st
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _flat_transport(n_ranks: int, replicated: bool = False):
+    """A bare transport over a fresh world, every worker registered."""
+    rmap = ReplicaMap(n_ranks, n_ranks if replicated else 0)
+    t = ReplicaTransport(rmap, n_ranks)
+    eps = {w: t.register(w) for w in rmap.alive()}
+    return rmap, t, eps
+
+
+# --------------------------------------------------- duplicate-burst drain
+
+def test_10k_duplicate_burst_drains_without_recursion():
+    """A replayed burst re-delivers the same logged message 10k times; the
+    skip loop must drain it iteratively (the old recursive skip would blow
+    the default recursion limit at depth ~1000)."""
+    rmap, t, eps = _flat_transport(2)
+    ep = eps[rmap.cmp[1]]
+    first = LoggedMessage(0, 0, 1, 7, np.arange(3.0), 0)
+    nxt = LoggedMessage(1, 0, 1, 7, np.arange(3.0) + 1, 0)
+    t.deliver(ep, first)
+    for _ in range(10_000):
+        t.deliver(ep, first)             # replay duplicates (same send-ID)
+    t.deliver(ep, nxt)
+
+    got = t.match_recv(ep, 0, 7)
+    assert got is first
+    limit = sys.getrecursionlimit()
+    try:
+        sys.setrecursionlimit(900)       # make accidental recursion loud
+        got = t.match_recv(ep, 0, 7)
+    finally:
+        sys.setrecursionlimit(limit)
+    assert got is nxt
+    assert t.duplicates_skipped == 10_000
+    assert ep.live_messages() == []
+
+
+def test_drain_tag_consumes_all_sources_in_src_arrival_order():
+    rmap, t, eps = _flat_transport(4)
+    ep = eps[rmap.cmp[0]]
+    for sid, src in [(0, 3), (0, 1), (1, 3), (0, 2)]:
+        t.deliver(ep, LoggedMessage(sid, src, 0, 5, float(src * 10 + sid), 0))
+        t.deliver(ep, LoggedMessage(0, src, 0, 6, None, 0))  # other tag
+    out = t.drain_tag(ep, 5)
+    assert [(m.src, m.send_id) for m in out] == \
+        [(1, 0), (2, 0), (3, 0), (3, 1)]
+    assert t.drain_tag(ep, 5) == []
+    # the other tag's messages are untouched
+    assert [m.tag for m in ep.live_messages()] == [6, 6, 6, 6]
+
+
+# ------------------------------------------- property: bucketed == old scan
+
+class _ScanModel:
+    """The pre-refactor matcher: one linear inbox, first-match scan with
+    ``del inbox[i]``, send-ID dedup.  Ground truth for the indexed paths."""
+
+    def __init__(self, dst: int):
+        self.dst = dst
+        self.inbox = []
+        self.expected = {}
+
+    def deliver(self, msg):
+        self.inbox.append(msg)
+
+    def _dup(self, m) -> bool:
+        stream = (m.src, m.dst, m.tag)
+        exp = self.expected.get(stream, 0)
+        if m.send_id < exp:
+            return True
+        self.expected[stream] = exp + 1
+        return False
+
+    def take(self, src, tag):
+        i = 0
+        while i < len(self.inbox):
+            m = self.inbox[i]
+            if m.tag == tag and (src is None or m.src == src):
+                del self.inbox[i]
+                if self._dup(m):
+                    continue             # scan resumes at the same index
+                return m
+            i += 1
+        return None
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_indexed_matching_equals_linear_scan(seed):
+    """Random send/recv/recv_any interleavings with duplicate redelivery
+    (what a post-kill replay does): the bucketed matcher must return the
+    exact message sequence of the old linear scan and leave the same
+    residue, per-(src, tag) FIFO and exactly-once included."""
+    import random
+    rng = random.Random(seed)
+    n, tags = 4, (3, 4)
+    rmap, t, eps = _flat_transport(n)
+    ep = eps[rmap.cmp[0]]
+    model = _ScanModel(0)
+    counters = {}
+    history = []
+
+    for _ in range(rng.randint(10, 60)):
+        roll = rng.random()
+        if roll < 0.45 or not history:
+            src = rng.randint(1, n - 1)
+            tag = rng.choice(tags)
+            sid = counters.get((src, tag), 0)
+            counters[(src, tag)] = sid + 1
+            m = LoggedMessage(sid, src, 0, tag, float(sid), 0)
+            history.append(m)
+            t.deliver(ep, m)
+            model.deliver(m)
+        elif roll < 0.60:                # replay: redeliver an old message
+            m = rng.choice(history)
+            t.deliver(ep, m)
+            model.deliver(m)
+        else:
+            src = rng.choice([None, rng.randint(1, n - 1)])
+            tag = rng.choice(tags)
+            got = t.match_recv(ep, src, tag)
+            want = model.take(src, tag)
+            assert (got is want) or \
+                (got.src, got.tag, got.send_id) == \
+                (want.src, want.tag, want.send_id)
+
+    left = [(m.src, m.tag, m.send_id) for m in ep.live_messages()]
+    want_left = [(m.src, m.tag, m.send_id) for m in model.inbox]
+    assert left == want_left
+
+
+# ------------------------------------------------- wildcard-history trimming
+
+def test_trim_wildcards_keeps_cursor_math_across_bases():
+    """Trim drops consumed wc_order/wc_matches prefixes and advances the
+    bases; a replica that consumed less than its cmp twin gates the trim,
+    and its next wildcard match still lands on the right order entry."""
+    rmap, t, eps = _flat_transport(1, replicated=True)
+    cmp_ep, rep_ep = eps[rmap.cmp[0]], eps[rmap.rep[0]]
+    for sid in range(3):
+        m = LoggedMessage(sid, 0, 0, 9, float(sid), 0)
+        t.deliver(cmp_ep, m)
+        t.deliver(rep_ep, m)
+    for _ in range(3):
+        assert t.match_recv(cmp_ep, None, 9) is not None
+    assert t.match_recv(rep_ep, None, 9).send_id == 0
+
+    t.trim_wildcards(0)                  # rep consumed 1 -> keep = 1
+    assert t.wc_base[0] == 1 and len(t.wc_order[0]) == 2
+    assert cmp_ep.wc_matches_base == 1 and len(cmp_ep.wc_matches) == 2
+    assert rep_ep.wc_matches_base == 1 and rep_ep.wc_matches == []
+
+    # the replica's next wildcard still resolves entries 1 and 2
+    assert t.match_recv(rep_ep, None, 9).send_id == 1
+    assert t.match_recv(rep_ep, None, 9).send_id == 2
+    t.trim_wildcards(0)
+    assert t.wc_base[0] == 3 and t.wc_order[0] == []
+
+    # snapshot/load round-trips the bases; legacy snapshots default to 0
+    snap = t.snapshot_rank(0, cmp_ep)
+    assert snap["wc_base"] == 3 and snap["wc_matches_base"] == 3
+    t.load_rank(0, cmp_ep, snap)
+    assert t.wc_base[0] == 3 and cmp_ep.wc_matches_base == 3
+    legacy = {k: v for k, v in snap.items()
+              if k not in ("wc_base", "wc_matches_base")}
+    legacy["wc_order"] = []
+    t.load_rank(0, cmp_ep, legacy)
+    assert t.wc_base[0] == 0 and cmp_ep.wc_matches_base == 0
+
+
+class _TrimHub:
+    """Rank 0 wildcard-drains its peers every step (tests/test_comm_layer's
+    WildcardHub, sized for a combined-mode checkpointed run)."""
+
+    TAG = 9
+
+    def __init__(self, n_ranks: int):
+        self.n_ranks = n_ranks
+
+    def init_state(self, rank: int) -> dict:
+        return {"acc": np.zeros(2)}
+
+    def step(self, rank, state, t):
+        if rank == 0:
+            total = np.zeros(2)
+            for _ in range(self.n_ranks - 1):
+                src, payload = yield ("recv_any", self.TAG)
+                total = total + payload * (src + 1)
+        else:
+            yield ("send", 0, self.TAG,
+                   np.full(2, float(rank * 10 + t)))
+            total = None
+        total = yield ("bcast", total, 0)
+        return {"acc": state["acc"] + total}
+
+
+def _run_trim_hub(events=()):
+    app = _TrimHub(3)
+    ft = FTConfig(mode="combined", replication_degree=1.0, mtbf_s=1e9,
+                  ckpt_interval_s=2.0, ckpt_backend="memory")
+    rt = SimRuntime(app, ft, costs=CostModel(step_time_s=1.0),
+                    failure_events=list(events), workers_per_node=2)
+    res = rt.run(8)
+    return rt, res
+
+
+def test_checkpoint_trims_wildcard_history_and_replay_survives():
+    rt, clean = _run_trim_hub()
+    # 8 steps x 2 wildcard matches happened, but checkpoints trimmed the
+    # retained order down; the base accounts for the dropped prefix
+    assert rt.transport.wc_base[0] > 0
+    assert len(rt.transport.wc_order[0]) + rt.transport.wc_base[0] == 8 * 2
+    ep = rt.transport.endpoints[rt.rmap.cmp[0]]
+    assert ep.wc_consumed == 8 * 2
+    assert len(ep.wc_matches) == len(rt.transport.wc_order[0])
+
+    # a kill after a trim forces replica replay against the trimmed order
+    rt2, faulty = _run_trim_hub([FailureEvent(4.5, (0,))])
+    assert faulty.promotions == 1
+    for r in range(3):
+        np.testing.assert_array_equal(faulty.states[r]["acc"],
+                                      clean.states[r]["acc"])
+
+
+# ------------------------------------------------------ pinned fig digests
+
+@pytest.mark.parametrize("module", ["fig13_log_replay", "fig14_memstore",
+                                    "fig15_topology"])
+def test_fig_digests_pinned(module):
+    """The derived columns of the (cheap) figure benchmarks are bitwise
+    identical to the digests pinned on the pre-refactor transport.  CI's
+    bench-smoke job checks ALL five modules (incl. fig7/fig9) via
+    ``python -m benchmarks.pin_digests --check``."""
+    sys.path.insert(0, REPO_ROOT)        # benchmarks/ is a namespace pkg
+    try:
+        from benchmarks.pin_digests import DIGEST_PATH, capture
+        with open(DIGEST_PATH) as f:
+            pinned = json.load(f)
+        got = capture([module])[module]
+    finally:
+        sys.path.remove(REPO_ROOT)
+    assert got == pinned[module], \
+        f"{module} derived output drifted from the pinned digest"
