@@ -36,6 +36,7 @@ import argparse
 import json
 import multiprocessing as mp
 import os
+import queue
 import resource
 import sys
 import time
@@ -135,7 +136,17 @@ def measure(n_ranks: int, mode: str, steps: int,
     p = ctx.Process(target=_run_point,
                     args=(n_ranks, mode, steps, halo_floats, q))
     p.start()
-    out = q.get()
+    while True:
+        try:
+            out = q.get(timeout=1.0)
+            break
+        except queue.Empty:
+            # a crashed child (import error, OOM kill) must fail the
+            # bench, not hang the parent on the queue forever
+            if not p.is_alive():
+                raise RuntimeError(
+                    f"bench child N={n_ranks}/{mode} died "
+                    f"(exit code {p.exitcode}) before reporting")
     p.join()
     return out
 

@@ -16,6 +16,21 @@ copies with *freezing*:
   * a copy happens only when someone actually needs a writeable buffer:
     checkpoint restore (``structural_copy`` with ``mutable=True``).
 
+Two payload shapes canNOT be captured by freezing, and fall back to a
+real copy so sharing never corrupts the log:
+
+  * an ndarray **view of a writeable base** (``arr.base`` writeable) —
+    freezing the view leaves the underlying buffer writeable through the
+    base and sibling views.  The canonical stencil app sends a slice of
+    state it keeps updating, which real MPI permits (the buffer is
+    reusable once ``MPI_Send`` returns), so the view's contents are
+    captured with ``ndarray.copy`` instead;
+  * an **opaque object** (dict/list/tuple subclass, namedtuple,
+    dataclass, custom class) — the walker cannot see inside it, so
+    ``freeze_payload`` reports the payload as not fully frozen and the
+    transport restores the pre-CoW ``copy.deepcopy`` isolation for that
+    send.  Only fully-frozen payloads are ever shared.
+
 ``structural_copy`` is the checkpoint-time replacement for
 ``copy.deepcopy``: it shares frozen (read-only) arrays, copies writeable
 ones with ``ndarray.copy`` (no deepcopy machinery), and falls back to
@@ -23,32 +38,80 @@ ones with ``ndarray.copy`` (no deepcopy machinery), and falls back to
 """
 from __future__ import annotations
 
+from typing import Any, Tuple
+
 import copy
-from typing import Any
 
 import numpy as np
 
 
-def freeze_payload(payload: Any) -> Any:
-    """Freeze every ndarray reachable through dict/list/tuple containers
-    in place (``writeable = False``) and return the payload unchanged.
+def _base_writeable(base: Any) -> bool:
+    """Can the buffer owner ``base`` (of an ndarray view) still be
+    written?  Unknown owner types are assumed writeable — the safe
+    direction is a copy, never sharing a mutable buffer."""
+    if isinstance(base, np.ndarray):
+        return base.flags.writeable
+    if isinstance(base, memoryview):
+        return not base.readonly
+    if isinstance(base, (bytes, str)):
+        return False
+    return True
 
-    Freezing the array object itself means later in-place writes through
-    *this* object raise; writes through a different view of the same
-    buffer are not detected (sending a view of a buffer you keep mutating
-    is a bug under real MPI too)."""
+
+def freezable(payload: Any) -> bool:
+    """True when ``freeze_payload`` fully understands ``payload``:
+    ndarrays, numpy scalars, and immutable leaves inside exact-type
+    dict/list/tuple containers.  Anything else (subclasses, custom
+    objects) needs deepcopy isolation on the send path."""
     if isinstance(payload, np.ndarray):
-        payload.flags.writeable = False
-        return payload
-    if type(payload) is dict:
-        for v in payload.values():
-            freeze_payload(v)
-        return payload
-    if type(payload) in (list, tuple):
-        for v in payload:
-            freeze_payload(v)
-        return payload
-    return payload
+        return True
+    t = type(payload)
+    if t is dict:
+        return all(freezable(v) for v in payload.values())
+    if t in (list, tuple):
+        return all(freezable(v) for v in payload)
+    if payload is None or t in (int, float, bool, str, bytes, complex):
+        return True
+    return isinstance(payload, np.generic)
+
+
+def _freeze(obj: Any) -> Any:
+    if isinstance(obj, np.ndarray):
+        if obj.base is not None and _base_writeable(obj.base):
+            # view of a writeable buffer: freezing the view would not
+            # protect the buffer (base / sibling views stay writeable),
+            # so capture the contents — MPI_Send's buffer-reuse contract
+            obj = obj.copy()
+        obj.flags.writeable = False
+        return obj
+    t = type(obj)
+    if t is dict:
+        return {k: _freeze(v) for k, v in obj.items()}
+    if t is list:
+        return [_freeze(v) for v in obj]
+    if t is tuple:
+        return tuple(_freeze(v) for v in obj)
+    return obj
+
+
+def freeze_payload(payload: Any) -> Tuple[Any, bool]:
+    """Capture ``payload`` for sharing; returns ``(captured, frozen)``.
+
+    ``frozen=True``: every ndarray in ``captured`` is read-only (frozen
+    in place, or copied first when it was a view of a writeable base)
+    and the object is safe to share between the sender log, the
+    delivery, and the replica fill-in.  Non-view arrays are frozen *in
+    place*: later in-place writes through the sender's own reference
+    raise.  Writes through a pre-existing sibling view of a read-only
+    base are still undetectable — don't do that.
+
+    ``frozen=False``: the payload contains objects the walker does not
+    recognize; ``captured`` is the payload unchanged (nothing frozen),
+    and the caller must isolate it with ``copy.deepcopy`` before
+    sharing, exactly as the pre-CoW transport did."""
+    if not freezable(payload):
+        return payload, False
+    return _freeze(payload), True
 
 
 def structural_copy(obj: Any, *, mutable: bool = False) -> Any:

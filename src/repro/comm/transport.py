@@ -20,21 +20,29 @@ Matching is indexed (docs/perf.md): every delivery lands in a
 per-(src, tag) FIFO bucket AND a per-tag arrival index, as one shared
 *cell* ``[message, arrival_seq, alive]``.  A directed receive pops its
 bucket head; a wildcard receive pops the earliest live cell of its tag —
-both O(1) — and consuming through either index just flips the cell's
-alive flag, which the other index skips lazily.  Payloads are captured
-copy-on-write (``repro.comm.payload``): ndarrays are frozen at send time
-and the single frozen message is shared by the sender log, the
-computational delivery, and the replica fill-in.
+both O(1) — and consuming through either index flips the cell's alive
+flag AND nulls its message reference, so the payload is released the
+moment it is consumed even though the dead cell is still queued in the
+sibling index.  Dead cells themselves are bounded: ``admit`` pops the
+dead prefix of both deques before appending, and ``drain_tag`` drops
+the buckets it has fully consumed — neither index retains
+O(message-history) state.  Payloads are captured copy-on-write
+(``repro.comm.payload``): ndarrays are frozen at send time and the
+single frozen message is shared by the sender log, the computational
+delivery, and the replica fill-in; payloads the CoW walker cannot
+freeze (views of writeable buffers, opaque objects) are copied instead,
+restoring the pre-CoW isolation exactly where sharing would be unsafe.
 
 The transport knows nothing about scheduling, virtual time, checkpoints,
 or failure policy — those live in the runtime and repro.comm.recovery.
 """
 from __future__ import annotations
 
+import copy
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.comm.payload import freeze_payload
+from repro.comm.payload import freeze_payload, structural_copy
 from repro.core.message_log import (LoggedMessage, ReceiverCursor, SenderLog,
                                     payload_nbytes)
 from repro.core.replica_map import ReplicaMap
@@ -96,10 +104,16 @@ class Endpoint:
         b = self.buckets.get((msg.src, msg.tag))
         if b is None:
             b = self.buckets[(msg.src, msg.tag)] = deque()
+        # compact the dead prefix (cells consumed through the sibling
+        # index) so steady-state traffic never accumulates dead cells
+        while b and not b[0][2]:
+            b.popleft()
         b.append(cell)
         t = self.tag_index.get(msg.tag)
         if t is None:
             t = self.tag_index[msg.tag] = deque()
+        while t and not t[0][2]:
+            t.popleft()
         t.append(cell)
 
     def live_messages(self) -> List[LoggedMessage]:
@@ -130,9 +144,16 @@ class ReplicaTransport:
     """
 
     def __init__(self, rmap: ReplicaMap, n_ranks: int,
-                 log_limit_bytes: int = 1 << 28, cost_model=None):
+                 log_limit_bytes: int = 1 << 28, cost_model=None,
+                 mutable_recv: bool = False):
         self.rmap = rmap
         self.n = n_ranks
+        # opt-in (FTConfig.mutable_recv): hand every resolved p2p recv a
+        # private writeable copy instead of the shared frozen payload —
+        # for apps that mutate received buffers in place (legal under
+        # real MPI, where the recv buffer is app-owned).  Costs one
+        # structural_copy per recv; the log keeps the frozen original.
+        self.mutable_recv = mutable_recv
         self.send_logs = {r: SenderLog(r, log_limit_bytes)
                           for r in range(n_ranks)}
         # rank -> [(src, tag, send_id)]: the cmp-chosen wildcard order.
@@ -231,13 +252,23 @@ class ReplicaTransport:
              step: int, *, log: bool) -> None:
         """Route one send per the paper's §5 parallel scheme.
 
-        The payload is captured copy-on-write: frozen in place (ndarray
+        The payload is captured copy-on-write: frozen (ndarray
         ``writeable=False``) and shared by the log, the computational
         delivery and the replica fill-in — no per-send deepcopy.  A sender
         that mutates the object after the send gets a ValueError instead
-        of silent log corruption (the MPI buffer contract, made loud)."""
+        of silent log corruption (the MPI buffer contract, made loud).
+        Views of writeable buffers are copied at capture (sending a slice
+        of state you keep updating is legal, as under real MPI), and a
+        payload the CoW walker cannot freeze at all (subclass container,
+        custom object) falls back to the pre-CoW deepcopy isolation:
+        one capture copy here, one more for the replica fill-in below —
+        only fully-frozen payloads are ever shared."""
         role, src_rank = self.rmap.role_of(sender.wid)
-        payload = freeze_payload(payload)
+        payload, frozen = freeze_payload(payload)
+        if not frozen:
+            # opaque payload: isolate from later sender mutation exactly
+            # as the pre-CoW transport did
+            payload = copy.deepcopy(payload)  # repro: allow[deepcopy]
         nbytes = payload_nbytes(payload) if self.cost_model is not None else 0
         stream = (src_rank, dst_rank, tag)
         sid = sender.send_counters.get(stream, 0)
@@ -256,10 +287,13 @@ class ReplicaTransport:
                 self._charge(sender.wid, dst_wid, nbytes)
             # intercomm fill-in: destination replicated, source not — the
             # replica consumes the SAME frozen message through its own
-            # cursor (CoW: nobody can write the shared payload)
+            # cursor (CoW: nobody can write the shared payload); an
+            # unfrozen payload gets its own isolated copy instead
             if self.rmap.rep[dst_rank] is not None and \
                     self.rmap.rep[src_rank] is None:
                 rep_wid = self.rmap.rep[dst_rank]
+                if not frozen:
+                    msg = copy.deepcopy(msg)  # repro: allow[deepcopy]
                 self.deliver(self.endpoints[rep_wid], msg)
                 if self.cost_model is not None:
                     self._charge(sender.wid, rep_wid, nbytes)
@@ -316,7 +350,10 @@ class ReplicaTransport:
               tag: int) -> Optional[LoggedMessage]:
         """Pop the next live match: the (src, tag) bucket head, or — for a
         wildcard — the earliest arrival of the tag across sources.  The
-        duplicate skip is a loop (a replayed burst must not recurse)."""
+        duplicate skip is a loop (a replayed burst must not recurse).
+        Consuming a cell nulls its message reference: the dead cell may
+        linger in the sibling index until compaction, but never pins the
+        payload."""
         if src_rank is None:
             q = ep.tag_index.get(tag)
         else:
@@ -329,6 +366,7 @@ class ReplicaTransport:
                 continue                     # consumed via the other index
             cell[2] = False
             m = cell[0]
+            cell[0] = None                   # release for the sibling index
             if not ep.cursor.should_deliver(m):
                 self.duplicates_skipped += 1
                 continue
@@ -348,14 +386,24 @@ class ReplicaTransport:
         q.clear()
         cells.sort(key=lambda c: (c[0].src, c[1]))
         out = []
+        srcs = set()
         for cell in cells:
             cell[2] = False
             m = cell[0]
+            cell[0] = None
+            srcs.add(m.src)
             if not ep.cursor.should_deliver(m):
                 self.duplicates_skipped += 1
                 continue
             self.activity += 1
             out.append(m)
+        # a live cell only ever leaves an index by being consumed, so
+        # after the flip above EVERY cell of this tag is dead — the
+        # drained sources' buckets hold nothing else; drop them whole
+        # (store tags are consumed exclusively through here, and without
+        # this every push would pin a dead cell per message forever)
+        for src in sorted(srcs):
+            ep.buckets.pop((src, tag), None)
         return out
 
     # -------------------------------------------------------- op intake/resolve
@@ -385,24 +433,32 @@ class ReplicaTransport:
     def owns_pending(self, pend: tuple) -> bool:
         return pend[0] in _P2P_PENDING
 
+    def _recv_payload(self, m: LoggedMessage) -> Any:
+        """The payload an app-level recv hands back: the shared frozen
+        payload, or a private writeable copy under ``mutable_recv``."""
+        if self.mutable_recv:
+            return structural_copy(m.payload, mutable=True)
+        return m.payload
+
     def resolve(self, ep: Endpoint, pend: tuple):
         """Attempt to complete a p2p pending; NOTHING while blocked."""
         kind = pend[0]
         if kind == "recv":
             _, src, tag = pend
             m = self.match_recv(ep, src, tag)
-            return m.payload if m is not None else NOTHING
+            return self._recv_payload(m) if m is not None else NOTHING
         if kind == "recv_any":
             _, tag = pend
             m = self.match_recv(ep, None, tag)
-            return (m.src, m.payload) if m is not None else NOTHING
+            return (m.src, self._recv_payload(m)) if m is not None \
+                else NOTHING
         if kind == "exchange_wait":
             _, srcs, tag, got = pend
             for s in srcs:
                 if s not in got:
                     m = self.match_recv(ep, s, tag)
                     if m is not None:
-                        got[s] = m.payload
+                        got[s] = self._recv_payload(m)
             return got if len(got) == len(srcs) else NOTHING
         raise ValueError(f"not a p2p pending: {kind!r}")
 

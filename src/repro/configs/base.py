@@ -208,6 +208,11 @@ class FTConfig:
     topo_small_msg: int = 8192           # bytes; selection threshold
     weibull_shape: float = 0.7           # paper: matches real failure traces
     message_log_limit_bytes: int = 1 << 28
+    # hand every p2p recv a private writeable copy instead of the shared
+    # frozen (read-only) payload — for apps that mutate received buffers
+    # in place, legal under real MPI (docs/comm_api.md migration notes).
+    # Costs one structural_copy per recv.
+    mutable_recv: bool = False
     max_failures: int = 0                # 0 -> unbounded
     seed: int = 0
 

@@ -167,7 +167,9 @@ class SimRuntime:
         # the layered comm subsystem (repro.comm)
         self.transport = ReplicaTransport(self.rmap, self.n,
                                           ft.message_log_limit_bytes,
-                                          cost_model=self.topo_costs)
+                                          cost_model=self.topo_costs,
+                                          mutable_recv=getattr(
+                                              ft, "mutable_recv", False))
         self.engine = CollectiveEngine(self.transport, ops=engine_ops)
         # replica-divergence tripwire (repro.analyze): CRC-compare every
         # cmp/rep send pair and raise at the first mismatch — silent

@@ -23,7 +23,7 @@ import sys
 import numpy as np
 import pytest
 
-from repro.comm.transport import ReplicaTransport
+from repro.comm.transport import NOTHING, ReplicaTransport
 from repro.configs.base import FTConfig
 from repro.core.failure_sim import FailureEvent
 from repro.core.message_log import LoggedMessage
@@ -83,6 +83,104 @@ def test_drain_tag_consumes_all_sources_in_src_arrival_order():
     assert t.drain_tag(ep, 5) == []
     # the other tag's messages are untouched
     assert [m.tag for m in ep.live_messages()] == [6, 6, 6, 6]
+
+
+# ------------------------------------- cell lifecycle: no dead-cell leaks
+
+def test_consumed_cells_release_payloads_in_both_indexes():
+    """Consuming through one index must not pin payloads in the sibling
+    index: a consumed cell nulls its message reference immediately, and
+    admit compacts dead prefixes, so 1000 directed recvs leave at most
+    one (empty) dead cell in tag_index — and vice versa for wildcards
+    leaving buckets."""
+    rmap, t, eps = _flat_transport(2)
+    src, dst = eps[rmap.cmp[0]], eps[rmap.cmp[1]]
+    for i in range(1000):
+        t.send(src, 1, 7, np.full(16, float(i)), 0, log=False)
+        assert t.match_recv(dst, 0, 7) is not None      # directed
+    assert len(dst.tag_index[7]) <= 1
+    assert all(c[0] is None for c in dst.tag_index[7])
+    for i in range(1000):
+        t.send(src, 1, 9, np.full(16, float(i)), 0, log=False)
+        assert t.match_recv(dst, None, 9) is not None   # wildcard
+    assert len(dst.buckets[(0, 9)]) <= 1
+    assert all(c[0] is None for c in dst.buckets[(0, 9)])
+
+
+def test_drain_tag_drops_consumed_bucket_cells():
+    """Store tags are consumed exclusively through drain_tag: repeated
+    push/drain generations must not accumulate dead cells (each of which
+    would pin a full band payload) in the per-(src, tag) buckets."""
+    rmap, t, eps = _flat_transport(4)
+    hub = eps[rmap.cmp[0]]
+    for gen in range(50):
+        for r in (1, 2, 3):
+            t.send(eps[rmap.cmp[r]], 0, 5, np.full(64, float(gen)), gen,
+                   log=False)
+        assert len(t.drain_tag(hub, 5)) == 3
+    for r in (1, 2, 3):
+        assert not hub.buckets.get((r, 5))
+    assert not any(c[0] is not None for c in hub.tag_index[5])
+
+
+# --------------------------------- payload capture: views, opaques, recv
+
+class Box:
+    """Module-level (the sender log pickles opaque payloads to size
+    them): an object the CoW walker cannot freeze."""
+
+    def __init__(self, arr):
+        self.arr = arr
+
+def test_sent_view_of_writeable_state_is_captured_not_frozen():
+    """The canonical stencil pattern: send a slice of state you keep
+    updating.  Real MPI permits buffer reuse once MPI_Send returns, so
+    the transport must capture the slice's contents (copy) rather than
+    freeze a view whose base stays writeable under the app's feet."""
+    rmap, t, eps = _flat_transport(2)
+    state = np.arange(10.0)
+    t.send(eps[rmap.cmp[0]], 1, 7, {"halo": state[2:5]}, 0, log=True)
+    state[:] = -1.0                      # sender keeps updating its state
+    got = t.match_recv(eps[rmap.cmp[1]], 0, 7)
+    np.testing.assert_array_equal(got.payload["halo"], [2.0, 3.0, 4.0])
+    np.testing.assert_array_equal(t.send_logs[0].log[0].payload["halo"],
+                                  [2.0, 3.0, 4.0])
+    assert state.flags.writeable         # the app's state is never frozen
+
+
+def test_opaque_payload_falls_back_to_deepcopy_isolation():
+    """A payload the CoW walker cannot freeze (custom object) gets the
+    pre-CoW semantics back: the capture copy isolates it from later
+    sender mutation, and the replica fill-in gets its own copy isolated
+    from the computational receiver."""
+    rmap = ReplicaMap(2, 1)              # rank 0 replicated, rank 1 not
+    t = ReplicaTransport(rmap, 2)
+    eps = {w: t.register(w) for w in rmap.alive()}
+    box = Box(np.arange(4.0))
+    t.send(eps[rmap.cmp[1]], 0, 3, box, 0, log=True)   # 1 -> 0: fill-in
+    box.arr[:] = -1.0                    # sender mutates after the send
+    cmp_msg = t.match_recv(eps[rmap.cmp[0]], 1, 3)
+    rep_msg = t.match_recv(eps[rmap.rep[0]], 1, 3)
+    np.testing.assert_array_equal(cmp_msg.payload.arr, np.arange(4.0))
+    np.testing.assert_array_equal(rep_msg.payload.arr, np.arange(4.0))
+    assert cmp_msg.payload is not rep_msg.payload      # isolated deliveries
+    cmp_msg.payload.arr[:] = 99.0        # receiver mutates its delivery
+    np.testing.assert_array_equal(rep_msg.payload.arr, np.arange(4.0))
+
+
+def test_mutable_recv_hands_out_private_writeable_copies():
+    """The mutable_recv opt-in restores app-owned recv buffers: resolve
+    returns a writeable copy, and mutating it cannot touch the logged
+    original."""
+    rmap = ReplicaMap(2, 0)
+    t = ReplicaTransport(rmap, 2, mutable_recv=True)
+    eps = {w: t.register(w) for w in rmap.alive()}
+    t.send(eps[rmap.cmp[0]], 1, 7, np.arange(4.0), 0, log=True)
+    out = t.resolve(eps[rmap.cmp[1]], ("recv", 0, 7))
+    assert out is not NOTHING and out.flags.writeable
+    out[:] = 0.0                         # in-place mutation is now legal
+    np.testing.assert_array_equal(t.send_logs[0].log[0].payload,
+                                  np.arange(4.0))
 
 
 # ------------------------------------------- property: bucketed == old scan
