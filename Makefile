@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test lint analyze mypy check bench bench-smoke bench-store \
-    bench-topo bench-clock bench-scale
+    bench-topo bench-clock bench-scale bench-obs
 
 test:
 	$(PY) -m pytest -x -q
@@ -51,6 +51,13 @@ bench-clock:
 	$(PY) -m benchmarks.run --only clock_breakdown
 
 # simulator-core throughput ladder N=8192->131072 (docs/perf.md); writes
-# BENCH_scale.json. CI runs `--smoke --no-write` (N<=4096 floor check).
+# BENCH_scale.json. CI runs `--smoke --no-write` (N<=4096 floor check +
+# the obs-on overhead gate).
 bench-scale:
 	$(PY) -m benchmarks.bench_scale
+
+# observability smoke (docs/obs_api.md): traced HPCG@64 with a mid-run
+# node kill; asserts the trace/metrics artifacts parse, the recovery
+# arcs are present, and band bytes reconcile with the sender logs
+bench-obs:
+	$(PY) -m benchmarks.obs_smoke

@@ -55,6 +55,17 @@ SMOKE_LADDER = (1024, 4096)
 MODES = ("none", "replication", "combined")
 SMOKE_FLOOR_FRACTION = 0.7          # >30% regression vs baseline fails
 
+# obs overhead gate (docs/obs_api.md): one failure-free point measured
+# with the recorder off and on; tracing+metrics may not cost more than
+# this fraction of obs-off throughput.  steps is overridden down so the
+# paired run stays tens of seconds on top of the smoke ladder.  Each
+# side is best-of-OBS_REPEATS: single-shot steps/s on this point swings
+# ~±15% run to run, which would flake a 15% gate; the max over repeats
+# estimates each side's capability instead of one draw of the noise.
+OBS_OVERHEAD_LIMIT = 0.15
+OBS_POINT = (1024, "replication", 64)        # (n_ranks, mode, steps)
+OBS_REPEATS = 3
+
 
 class SparseHalo:
     """Ring halo exchange + 1-D wavefront sweep; tiny deterministic state."""
@@ -92,7 +103,7 @@ class SparseHalo:
 
 
 def _run_point(n_ranks: int, mode: str, steps: int, halo_floats: int,
-               out_q) -> None:
+               out_q, obs: bool = False) -> None:
     """One (N, mode) measurement; runs in a forked child."""
     from repro.configs.base import FTConfig
     from repro.simrt import CostModel, SimRuntime
@@ -111,7 +122,8 @@ def _run_point(n_ranks: int, mode: str, steps: int, halo_floats: int,
         ft = FTConfig(mode="none")
     costs = CostModel(step_time_s=1.0, ckpt_cost_s=0.01,
                       restore_cost_s=0.01)
-    rt = SimRuntime(app, ft, costs=costs, workers_per_node=4)
+    rt = SimRuntime(app, ft, costs=costs, workers_per_node=4,
+                    obs=True if obs else None)
     # repro: allow[wallclock] -- genuine wall measurement
     t0 = time.perf_counter()
     res = rt.run(steps)
@@ -126,15 +138,16 @@ def _run_point(n_ranks: int, mode: str, steps: int, halo_floats: int,
         if wall > 0 else 0.0,
         "peak_rss_mib": round(rss_mib, 1),
         "check_value": res.check_value,
+        "obs": obs,
     })
 
 
 def measure(n_ranks: int, mode: str, steps: int,
-            halo_floats: int = 64) -> dict:
+            halo_floats: int = 64, obs: bool = False) -> dict:
     ctx = mp.get_context("fork")
     q = ctx.Queue()
     p = ctx.Process(target=_run_point,
-                    args=(n_ranks, mode, steps, halo_floats, q))
+                    args=(n_ranks, mode, steps, halo_floats, q, obs))
     p.start()
     while True:
         try:
@@ -199,14 +212,48 @@ def record_pre_baseline(args) -> int:
     return 0
 
 
+def obs_overhead(repeats: int = OBS_REPEATS) -> tuple:
+    """Paired obs-off/obs-on run of OBS_POINT; returns (off, on, overhead)
+    where overhead is the fractional throughput cost of the recorder.
+    Each side is the best (fastest) of ``repeats`` forked runs —
+    interleaved, so a machine-load drift hits both sides alike."""
+    n, mode, steps = OBS_POINT
+    runs = {False: [], True: []}
+    for _ in range(repeats):
+        for obs in (False, True):
+            runs[obs].append(measure(n, mode, steps, obs=obs))
+    off = max(runs[False], key=lambda p: p["steps_per_s"])
+    on = max(runs[True], key=lambda p: p["steps_per_s"])
+    overhead = (off["steps_per_s"] / on["steps_per_s"] - 1.0) \
+        if on["steps_per_s"] > 0 else float("inf")
+    return off, on, overhead
+
+
 def smoke(args) -> int:
     pts = run_ladder(SMOKE_LADDER, MODES)
     data = _load()
     floors = data.get("smoke", {})
     data["smoke"] = {_key(p): p for p in pts}
+    bad = []
+    # obs overhead gate: the recorder-off ladder above already enforces
+    # the PR 7 floors; this paired point enforces the obs-on ceiling
+    off, on, overhead = obs_overhead()
+    if on["check_value"] != off["check_value"]:
+        bad.append(f"obs changed the result: check "
+                   f"{on['check_value']!r} != {off['check_value']!r}")
+    print(f"  obs overhead @ {_key(off)}: off {off['steps_per_s']:.3f} "
+          f"on {on['steps_per_s']:.3f} steps/s "
+          f"(+{100 * overhead:.1f}%, limit {100 * OBS_OVERHEAD_LIMIT:.0f}%)",
+          file=sys.stderr)
+    data["obs_overhead"] = {"off": off, "on": on,
+                            "overhead": round(overhead, 4)}
     if not args.no_write:
         _store(data)
-    bad = []
+    if overhead > OBS_OVERHEAD_LIMIT:
+        bad.append(f"obs overhead {100 * overhead:.1f}% > "
+                   f"{100 * OBS_OVERHEAD_LIMIT:.0f}% limit "
+                   f"({on['steps_per_s']:.3f} vs {off['steps_per_s']:.3f} "
+                   f"steps/s at {_key(off)})")
     for p in pts:
         base = floors.get(_key(p))
         if base is None:

@@ -1,8 +1,14 @@
 """Paper Fig 9: where the time goes — useful work vs checkpoint create /
-restore / rollback / repair / log removal, checkpointing vs replication."""
+restore / rollback / repair / log removal, checkpointing vs replication.
+
+The percentage accounting (including the replication-mode useful/redundant
+split) is ``repro.obs.time_distribution`` — the same function the obs
+metrics snapshot uses, so this figure and a traced run's
+``obs_metrics["time_distribution"]`` can never disagree."""
 import time
 
 from benchmarks.common import TABLE1, run_avg
+from repro.obs import time_distribution
 
 
 def run() -> list:
@@ -11,15 +17,9 @@ def run() -> list:
     for procs, mu, c in TABLE1["HPCG"][1:]:
         for mode in ("checkpoint", "replication"):
             p = run_avg("HPCG", procs, mu, c, mode, seeds=(5,6,7))
-            b = p.breakdown
-            tot = b["total"]
-            comp = {k: 100.0 * v / tot for k, v in b.items() if k != "total"}
-            useful_pct = comp["useful"]
-            if mode == "replication":
-                # half of 'useful' machine-seconds are redundant (paper
-                # plots useful vs redundant separately)
-                comp["redundant"] = useful_pct / 2
-                comp["useful"] = useful_pct / 2
+            # full replication: half the machine redoes the other half
+            frac = 0.5 if mode == "replication" else 0.0
+            comp = time_distribution(p.breakdown, frac)
             detail = " ".join(f"{k}={v:.1f}%" for k, v in comp.items()
                               if v > 0.05)
             rows.append((f"fig9/{mode}_{procs}", comp["useful"], detail))

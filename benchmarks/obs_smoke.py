@@ -1,0 +1,117 @@
+"""bench-obs: the observability acceptance run as a CI smoke.
+
+Runs the canonical traced scenario (``repro.obs.demo.traced_hpcg_run``:
+HPCG @ 64 logical ranks, combined strategy over the in-memory store,
+fat-tree pricing, one mid-run node kill), exports both artifacts —
+Chrome-trace JSON and the metrics snapshot — and asserts:
+
+  * both artifacts parse back through ``json.loads``;
+  * the trace carries the recovery arcs (failure / recovery.promote with
+    drain / replay / promotion children) and every span closed;
+  * event timestamps are monotone per tid (Perfetto's import contract);
+  * the per-band byte counters reconcile with the sender-log traffic
+    (cmp-role bytes over logged bands == sum of SenderLog.recorded_bytes).
+
+    make bench-obs
+    python -m benchmarks.obs_smoke [--out DIR]
+
+numpy-only; CI runs this in the bare bench environment without jax.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+from repro.obs.demo import traced_hpcg_run
+from repro.obs.exporters import chrome_trace, write_chrome_trace
+
+# bands the sender logs record (store pushes are sent with log=False)
+_LOGGED_BANDS = ("app", "coll", "topo", "reserved")
+
+
+def check_artifacts(out_dir: str) -> list:
+    """Run the scenario, write artifacts into ``out_dir``, and return a
+    list of failure strings (empty on success)."""
+    bad = []
+    rt, res, obs = traced_hpcg_run()
+    snap = obs.snapshot()
+
+    trace_path = os.path.join(out_dir, "obs_smoke_trace.json")
+    metrics_path = os.path.join(out_dir, "obs_smoke_metrics.json")
+    write_chrome_trace(trace_path, obs.tracer, snap)
+    obs.metrics.to_json(metrics_path,
+                        time_distribution=snap.get("time_distribution"),
+                        links=snap.get("links"), world=snap.get("world"))
+
+    # both artifacts must round-trip json.loads from disk
+    with open(trace_path) as f:
+        trace = json.loads(f.read())
+    with open(metrics_path) as f:
+        metrics = json.loads(f.read())
+    events = trace.get("traceEvents", [])
+    if not events:
+        bad.append("trace exported no events")
+    if "counters" not in metrics:
+        bad.append("metrics snapshot missing 'counters'")
+
+    # the kill actually happened and left its arcs in the trace
+    if res.failures == 0 or res.promotions == 0:
+        bad.append(f"scenario did not exercise recovery "
+                   f"(failures={res.failures}, "
+                   f"promotions={res.promotions})")
+    names = {e.get("name") for e in events}
+    for required in ("failure", "recovery.promote", "drain", "replay",
+                     "promotion", "ckpt.write", "store.push"):
+        if required not in names:
+            bad.append(f"trace missing required span/event {required!r}")
+    if obs.tracer.open_spans():
+        bad.append(f"unclosed spans: {obs.tracer.open_spans()}")
+
+    # Perfetto contract: ts monotone per tid for the duration events
+    last = {}
+    for e in events:
+        if e.get("ph") not in ("X", "i"):
+            continue
+        tid = e["tid"]
+        if e["ts"] < last.get(tid, float("-inf")):
+            bad.append(f"non-monotone ts on tid {tid}")
+            break
+        last[tid] = e["ts"]
+
+    # per-band counters reconcile with the sender-log traffic
+    c = metrics["counters"]
+    obs_bytes = sum(c.get(f"comm.bytes.{b}.cmp", 0) for b in _LOGGED_BANDS)
+    log_bytes = sum(lg.recorded_bytes
+                    for lg in rt.transport.send_logs.values())
+    if obs_bytes != log_bytes:
+        bad.append(f"band bytes {obs_bytes} != sender-log bytes "
+                   f"{log_bytes}")
+
+    print(f"bench-obs: {len(events)} events, {len(c)} counters, "
+          f"{res.failures} failures / {res.promotions} promotions / "
+          f"{res.replays} replays, cmp bytes {obs_bytes} == "
+          f"log bytes {log_bytes} -> {out_dir}")
+    # in-memory export must agree with the on-disk artifact
+    if len(chrome_trace(obs.tracer)["traceEvents"]) != len(events):
+        bad.append("in-memory chrome_trace disagrees with written file")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="artifact directory (default: a temp dir)")
+    args = ap.parse_args(argv)
+    out_dir = args.out or tempfile.mkdtemp(prefix="obs_smoke_")
+    os.makedirs(out_dir, exist_ok=True)
+    bad = check_artifacts(out_dir)
+    for line in bad:
+        print(f"FAIL {line}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -102,7 +102,7 @@ class DivergenceDetector:
     Usage::
 
         det = DivergenceDetector(raise_on_divergence=True)
-        det.attach(transport)          # transport.observer = det
+        det.attach(transport)          # joins transport.observers (first)
         ... run ...
         det.first                      # None, or the first DivergenceRecord
 
@@ -126,12 +126,15 @@ class DivergenceDetector:
 
     def attach(self, transport) -> "DivergenceDetector":
         self.transport = transport
-        transport.observer = self
+        # first=True: the detector must see every send before other
+        # observers (metrics recorders) account it, so a raised
+        # divergence stops the run before its traffic is booked
+        transport.add_observer(self, first=True)
         return self
 
     def detach(self) -> None:
-        if self.transport is not None and self.transport.observer is self:
-            self.transport.observer = None
+        if self.transport is not None:
+            self.transport.remove_observer(self)
         self.transport = None
 
     def reset(self) -> None:

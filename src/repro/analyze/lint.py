@@ -29,6 +29,12 @@ those invariants as five rules over ``src/repro``:
                       payloads are copy-on-write (frozen at send,
                       repro.comm.payload), so a deepcopy per message is
                       an O(payload) regression waiting to happen
+  no-print            bare ``print(...)`` in library modules: runtime
+                      state belongs in the repro.obs surfaces (metrics /
+                      traces) or in a returned result, not on stdout.
+                      CLI modules are exempt — a ``__main__.py``, or any
+                      module defining a top-level ``main()`` entry point
+                      (benchmarks/ lives outside the lint root entirely)
 
 Suppression: a finding is suppressed by ``# repro: allow[rule]`` (comma
 separated rule ids; ``allow[*]`` allows everything) on the finding's line
@@ -54,6 +60,8 @@ RULES: Dict[str, str] = {
     "tag-range": "reserved message-tag band violation or collision",
     "deepcopy": "copy.deepcopy on a comm hot path (payloads are "
                 "copy-on-write)",
+    "no-print": "bare print() in a library module (not a CLI entry "
+                "point)",
 }
 
 # the comm hot paths the deepcopy rule polices (path fragments)
@@ -135,6 +143,10 @@ class _Linter(ast.NodeVisitor):
         self._set_vars: List[Dict[str, bool]] = [{}]
         self._order_safe_depth = 0
         self._class_stack: List[ast.ClassDef] = []
+        # no-print: findings held back until the whole module is seen —
+        # a later top-level ``def main`` still marks the module as a CLI
+        self.print_findings: List[Finding] = []
+        self.is_cli = os.path.basename(path) == "__main__.py"
 
     # -- helpers -------------------------------------------------------------
 
@@ -206,6 +218,9 @@ class _Linter(ast.NodeVisitor):
         self._set_vars.pop()
 
     def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        if node.name == "main" and len(self._set_vars) == 1 \
+                and not self._class_stack:
+            self.is_cli = True           # top-level main(): a CLI module
         self._walk_scope(node)
 
     def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
@@ -277,6 +292,7 @@ class _Linter(ast.NodeVisitor):
             self._check_rng(node, dotted)
             self._check_transport(node, dotted)
             self._check_deepcopy(node, dotted)
+        self._check_print(node)
         self._check_set_call(node)
         safe = isinstance(node.func, ast.Name) and \
             node.func.id in _ORDER_SAFE_CALLS
@@ -349,6 +365,18 @@ class _Linter(ast.NodeVisitor):
                    "structural_copy; annotate a justified isolation copy "
                    "with  # repro: allow[deepcopy]")
 
+    def _check_print(self, node: ast.Call) -> None:
+        """Bare print() in library code; held back until the module-level
+        walk finishes so a later ``def main`` still exempts the module."""
+        if isinstance(node.func, ast.Name) and node.func.id == "print":
+            self.print_findings.append(Finding(
+                "no-print", self.path, node.lineno,
+                "print() in a library module writes simulator state to "
+                "stdout",
+                "route it through repro.obs (metrics/trace) or return "
+                "it; CLI modules (__main__.py / top-level main()) are "
+                "exempt, or annotate with  # repro: allow[no-print]"))
+
     def _check_set_call(self, node: ast.Call) -> None:
         """list(set(..)) / tuple(set(..)) / enumerate(set(..)) materialize
         the unordered iteration order."""
@@ -398,6 +426,8 @@ def lint_source(source: str, path: str = "<string>",
     tree = ast.parse(source, filename=path)
     linter = _Linter(path, source)
     linter.visit(tree)
+    if not linter.is_cli:
+        linter.findings.extend(linter.print_findings)
     allows = parse_allows(source)
     findings = [f for f in linter.findings
                 if not _suppressed(allows, f.line, f.rule)]

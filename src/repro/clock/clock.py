@@ -63,13 +63,22 @@ class VirtualClock:
             else TimeBreakdown()
         self.cost_model = cost_model
         self.now = 0.0
+        # optional observability hook (repro.obs.ObsRecorder.bind_clock):
+        # every charge is mirrored to obs.on_charge(component, seconds,
+        # label).  None (default) keeps charge() allocation-free.
+        self.obs = None
 
     # -- charging ------------------------------------------------------------
 
     def charge(self, component: str, seconds: float, *,
-               advance: bool = True) -> float:
+               advance: bool = True,
+               label: Optional[str] = None) -> float:
         """Book ``seconds`` of ``component`` time into the ledger;
-        ``advance`` also moves the schedule clock.  Returns ``seconds``."""
+        ``advance`` also moves the schedule clock.  ``label`` is an
+        optional attribution tag for observability (e.g. which recovery
+        arc a ``repair`` charge belongs to) — it never affects the
+        ledger, only the mirrored ``obs.on_charge`` call.  Returns
+        ``seconds``."""
         if component not in COMPONENTS:
             raise ValueError(f"unknown time component {component!r}; "
                              f"expected one of {COMPONENTS}")
@@ -79,6 +88,8 @@ class VirtualClock:
                 getattr(self.breakdown, component) + seconds)
         if advance:
             self.now += seconds
+        if self.obs is not None:
+            self.obs.on_charge(component, seconds, label)
         return seconds
 
     # -- schedule-clock motion (no ledger entry) -----------------------------

@@ -492,6 +492,11 @@ class CollectiveEngine:
         self.contrib: Dict[tuple, Dict] = {}
         self.combined: Dict[tuple, Any] = {}
         self._role_views: Dict[str, Tuple] = {}
+        # optional observability hook (repro.obs.ObsRecorder): mirrored
+        # every post() as on_collective(kind, role, rank, step, idx) with
+        # idx the endpoint's pre-post op_index — the same instance key
+        # the switchboard matches on.  None (default) costs one check.
+        self.obs = None
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -537,6 +542,10 @@ class CollectiveEngine:
         if handler is None:
             raise ValueError(f"unknown collective {op[0]!r}")
         role, rank = self.transport.role_of(ep)
+        if self.obs is not None:
+            # capture op_index BEFORE the handler advances it: this is
+            # the instance index the collective is keyed by
+            self.obs.on_collective(op[0], role, rank, step, ep.op_index)
         return handler.post(self, ep, role, rank, op, step)
 
     def resolve(self, ep: Endpoint, pend: tuple):

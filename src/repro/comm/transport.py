@@ -174,11 +174,19 @@ class ReplicaTransport:
         # with msg_cost_workers); None keeps the transport cost-free
         self.cost_model = cost_model
         self.comm_time: Dict[int, float] = {}   # sender wid -> accrued s
-        # optional send observer (repro.analyze.DivergenceDetector): called
-        # once per logical send with (role, src, dst, tag, send_id,
-        # payload, step) BEFORE role routing, so replica-side skipped
-        # sends are still observed
-        self.observer = None
+        # ordered send observers (repro.analyze.DivergenceDetector,
+        # repro.obs.ObsRecorder): each is called once per logical send
+        # with (role, src, dst, tag, send_id, payload, step) BEFORE role
+        # routing, so replica-side skipped sends are still observed.
+        # Ordering contract (docs/comm_api.md): the divergence detector
+        # registers FIRST (add_observer(first=True)) so a raising
+        # tripwire fires before any metrics/tracing observer counts the
+        # send it is about to reject.
+        self.observers: List[Any] = []
+        # per-link utilization accumulator (repro.obs.LinkUsage) fed by
+        # _charge alongside the α‑β pricing; None (default) adds one
+        # attribute check per priced message
+        self.link_usage = None
         # delivery wake hook: the ready-queue scheduler registers a
         # callable(wid) and gets woken per delivery and per wildcard-order
         # append (the two events that can unblock a parked worker)
@@ -202,6 +210,37 @@ class ReplicaTransport:
     def role_of(self, ep: Endpoint) -> Tuple[str, int]:
         return self.rmap.role_of(ep.wid)
 
+    # ------------------------------------------------------------ observers
+
+    def add_observer(self, obs, *, first: bool = False) -> None:
+        """Register a send observer.  ``first=True`` prepends (the
+        divergence detector's slot: raising tripwires run before
+        counting observers); re-adding an already-registered observer is
+        a no-op, and adding never displaces another observer — the old
+        single-slot ``observer`` attribute silently replaced whatever
+        was attached."""
+        if obs not in self.observers:
+            if first:
+                self.observers.insert(0, obs)
+            else:
+                self.observers.append(obs)
+
+    def remove_observer(self, obs) -> None:
+        try:
+            self.observers.remove(obs)
+        except ValueError:
+            pass
+
+    @property
+    def observer(self):
+        """Legacy single-observer view: the first registered observer."""
+        return self.observers[0] if self.observers else None
+
+    @observer.setter
+    def observer(self, obs) -> None:
+        # legacy assignment semantics: replace the whole set
+        self.observers = [] if obs is None else [obs]
+
     # -------------------------------------------------------------- sending
 
     def deliver(self, ep: Endpoint, msg: LoggedMessage) -> None:
@@ -210,12 +249,17 @@ class ReplicaTransport:
         if self.waker is not None:
             self.waker(ep.wid)
 
-    def _charge(self, src_wid: int, dst_wid: int, nbytes: int) -> None:
+    def _charge(self, src_wid: int, dst_wid: int, nbytes: int,
+                tag: Optional[int] = None) -> None:
         """Accrue the priced cost of one physical message on the sender
         (port model: the sender's NIC serializes its own messages; senders
-        run in parallel, so a step's comm time is the max over workers)."""
+        run in parallel, so a step's comm time is the max over workers).
+        ``tag`` labels the traffic class for the optional per-link
+        utilization accumulator (None: switchboard phantom pricing)."""
         cost = self.cost_model.msg_cost_workers(src_wid, dst_wid, nbytes)
         self.comm_time[src_wid] = self.comm_time.get(src_wid, 0.0) + cost
+        if self.link_usage is not None:
+            self.link_usage.record(src_wid, dst_wid, tag, nbytes)
 
     def take_comm_time(self) -> float:
         """Max accrued per-worker comm time since the last take (0.0 with
@@ -273,9 +317,10 @@ class ReplicaTransport:
         stream = (src_rank, dst_rank, tag)
         sid = sender.send_counters.get(stream, 0)
         sender.send_counters[stream] = sid + 1
-        if self.observer is not None:
-            self.observer.on_send(role, src_rank, dst_rank, tag, sid,
-                                  payload, step)
+        if self.observers:
+            for ob in self.observers:
+                ob.on_send(role, src_rank, dst_rank, tag, sid,
+                           payload, step)
         if role == "cmp":
             if log:
                 self.send_logs[src_rank].record(dst_rank, tag, payload,
@@ -284,7 +329,7 @@ class ReplicaTransport:
             dst_wid = self.rmap.cmp[dst_rank]
             self.deliver(self.endpoints[dst_wid], msg)
             if self.cost_model is not None:
-                self._charge(sender.wid, dst_wid, nbytes)
+                self._charge(sender.wid, dst_wid, nbytes, tag)
             # intercomm fill-in: destination replicated, source not — the
             # replica consumes the SAME frozen message through its own
             # cursor (CoW: nobody can write the shared payload); an
@@ -296,7 +341,7 @@ class ReplicaTransport:
                     msg = copy.deepcopy(msg)  # repro: allow[deepcopy]
                 self.deliver(self.endpoints[rep_wid], msg)
                 if self.cost_model is not None:
-                    self._charge(sender.wid, rep_wid, nbytes)
+                    self._charge(sender.wid, rep_wid, nbytes, tag)
         else:  # replica sender
             if self.rmap.rep[dst_rank] is not None:
                 msg = LoggedMessage(sid, src_rank, dst_rank, tag, payload,
@@ -304,7 +349,7 @@ class ReplicaTransport:
                 rep_wid = self.rmap.rep[dst_rank]
                 self.deliver(self.endpoints[rep_wid], msg)
                 if self.cost_model is not None:
-                    self._charge(sender.wid, rep_wid, nbytes)
+                    self._charge(sender.wid, rep_wid, nbytes, tag)
             # else: skip (paper: no replica destination -> source replica
             # skips the send)
 

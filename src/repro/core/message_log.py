@@ -72,6 +72,11 @@ class SenderLog:
         self.log: List[LoggedMessage] = []
         self.bytes = 0
         self.removal_events = 0
+        # monotone totals over the log's whole life: unlike ``bytes`` /
+        # ``len(log)`` they never shrink on trims, so observability can
+        # reconcile them against the transport's per-band send counters
+        self.recorded_msgs = 0
+        self.recorded_bytes = 0
 
     def record(self, dst: int, tag: int, payload: Any, step: int,
                send_id: Optional[int] = None) -> int:
@@ -80,7 +85,10 @@ class SenderLog:
         self.next_send_id[stream] = sid + 1
         msg = LoggedMessage(sid, self.rank, dst, tag, payload, step)
         self.log.append(msg)
-        self.bytes += msg.nbytes()
+        nbytes = msg.nbytes()
+        self.bytes += nbytes
+        self.recorded_msgs += 1
+        self.recorded_bytes += nbytes
         if self.bytes > self.limit_bytes:
             self._trim_half()
         return sid

@@ -63,6 +63,12 @@ class RunReport:
     # from the step loop, ckpt_write/restore at the backend's priced cost,
     # repair from the recovery plans, comm from priced fan-out traffic
     time: TimeBreakdown = field(default_factory=TimeBreakdown)
+    # observability (repro.obs, sessions built with obs=...): the run's
+    # recorder and its end-of-run snapshot.  Deliberately NOT the
+    # ``metrics`` field above — that list holds per-step workload scalars
+    # (``.losses`` reads it); the obs registry is a separate surface
+    obs: Any = None
+    obs_metrics: Optional[dict] = None
 
     @property
     def losses(self) -> List[float]:
@@ -100,7 +106,8 @@ class FTSession:
                  workers_per_node: int = 4,
                  simulate_replica: bool = True,
                  step_time_s: float = 1.0,
-                 allow_restart: bool = True):
+                 allow_restart: bool = True,
+                 obs=None):
         if strategy is None:
             strategy = make_strategy(ft or FTConfig())
         self.strategy = strategy.bind(self)
@@ -113,6 +120,12 @@ class FTSession:
         self.allow_restart = allow_restart
         self.ckpt_dir = ckpt_dir
         self.ckpt = None
+        # observability (repro.obs): obs=True builds a recorder, or pass
+        # one in; obs=None (default) keeps every hook a falsy check
+        self.obs = None
+        if obs is not None:
+            from repro.obs import ObsRecorder
+            self.obs = ObsRecorder() if obs is True else obs
         self._init_fabric()
 
     def _init_fabric(self):
@@ -138,6 +151,11 @@ class FTSession:
         # the run's clock writes straight into the report's ledger
         clock = self.clock = VirtualClock(breakdown=rep.time,
                                           cost_model=self.pricing.cost_model)
+        obs = self.obs
+        if obs is not None:
+            obs.bind_clock(clock)
+            obs.set_world(self.rmap.n, self.rmap.m,
+                          injector_kind=type(self.injector).__name__)
         # the strategy's on_start builds its CheckpointBackend
         # (repro.store.make_backend) and re-points the self.ckpt alias
         self.ckpt = None
@@ -163,13 +181,20 @@ class FTSession:
                 if not fresh:
                     continue
                 rep.failures += len(fresh)
+                if obs is not None:
+                    obs.metrics.inc("failures.kills.worker", len(fresh))
+                    obs.mark("failure", "failure", workers=tuple(fresh),
+                             step=step)
                 self.rmap, plan = plan_recovery(
                     self.rmap, fresh,
                     last_ckpt_step=strat.last_ckpt_step, current_step=step,
                     store=strat.recovery_store())
+                if obs is not None:
+                    obs.span(f"recovery.{plan.kind}", "recovery", step=step)
                 # shrink + message recovery (paper Fig 9 'repair');
                 # ledger-only: the step-indexed schedule clock ignores it
-                clock.charge("repair", plan.repair_cost_s, advance=False)
+                clock.charge("repair", plan.repair_cost_s, advance=False,
+                             label=plan.kind)
                 rep.events.append(StepEvent(step, plan.kind,
                                             {"failed": list(fresh),
                                              "promotions": plan.promotions,
@@ -177,6 +202,8 @@ class FTSession:
                                                  plan.restore_backend}))
                 state, step = strat.handle_plan(workload, state, plan,
                                                 step, rep)
+                if obs is not None:
+                    obs.end_span(resumed_step=step)
 
             # --- one workload step (strategy may double-execute) -----------
             component = "rollback" if step < done_through else "useful"
@@ -190,6 +217,10 @@ class FTSession:
             # re-executed post-rollback steps are booked as 'rollback'
             clock.charge(component, self.step_time_s)
             rep.steps = step
+            if obs is not None:
+                obs.on_step(step - 1, clock.now - self.step_time_s,
+                            self.step_time_s, component == "rollback",
+                            self.rmap.n)
 
             # --- coordinated checkpoint (primary timer) --------------------
             strat.maybe_checkpoint(workload, state, step, clock.now, rep)
@@ -197,4 +228,13 @@ class FTSession:
         rep.final_state = state
         # repro: allow[wallclock] -- genuine wall measurement
         rep.wall_s = time.perf_counter() - wall0
+        if obs is not None:
+            store = strat.recovery_store()
+            if store is not None:
+                obs.sample_store(store)
+                obs.sample_transport(store.transport)
+            if obs.tracer is not None:
+                obs.tracer.finish()
+            rep.obs = obs
+            rep.obs_metrics = obs.snapshot()
         return rep

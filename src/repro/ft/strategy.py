@@ -178,6 +178,10 @@ class _CheckpointMixin:
             sess.coords.set_interval(interval, vtime)
             self._interval_set = True
         if sess.coords.due_checkpoint(vtime):
+            obs = sess.obs
+            if obs is not None:
+                obs.span("ckpt.write", "ckpt", step=step)
+                obs.metrics.inc("ckpt.writes")
             # repro: allow[wallclock] -- genuine wall measurement
             t0 = time.perf_counter()
             self.backend.save(step, state, workload=workload)
@@ -193,7 +197,10 @@ class _CheckpointMixin:
             sess.clock.charge("ckpt_write",
                               self.ft.ckpt_cost_s
                               or self.backend.last_write_s or 0.0,
-                              advance=False)
+                              advance=False,
+                              label=type(self.backend).__name__)
+            if obs is not None:
+                obs.end_span()
             if self._auto_interval() and getattr(self.backend,
                                                  "modeled_cost", False):
                 # Young-Daly recomputed from the *effective* priced C: a
@@ -210,6 +217,9 @@ class _CheckpointMixin:
         from repro.store import StoreUnrecoverable
         if self.backend is None or not self.backend.has_checkpoint():
             return super()._restore(workload, state, rep)
+        obs = self.session.obs
+        if obs is not None:
+            obs.span("ckpt.restore", "recovery")
         # repro: allow[wallclock] -- genuine wall measurement
         t0 = time.perf_counter()
         try:
@@ -217,6 +227,8 @@ class _CheckpointMixin:
         except StoreUnrecoverable:
             # more failure domains lost than the placement tolerates:
             # restart from scratch like the no-checkpoint baseline
+            if obs is not None:
+                obs.end_span(outcome="unrecoverable")
             return super()._restore(workload, state, rep)
         # repro: allow[wallclock] -- genuine wall measurement
         dt = time.perf_counter() - t0
@@ -226,7 +238,10 @@ class _CheckpointMixin:
         # time only when the backend has no notion of restore cost
         cost = getattr(self.backend, "last_restore_s", None)
         self.session.clock.charge("restore", dt if cost is None else cost,
-                                  advance=False)
+                                  advance=False,
+                                  label=type(self.backend).__name__)
+        if obs is not None:
+            obs.end_span(to_step=ck_step)
         return state, ck_step
 
 

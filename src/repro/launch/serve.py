@@ -58,7 +58,7 @@ class BatchFanout:
 
     SERVE_RANK, FRONTEND_RANK = 0, 1
 
-    def __init__(self, replication: bool, ft: FTConfig = None):
+    def __init__(self, replication: bool, ft: FTConfig = None, obs=None):
         self.rmap = ReplicaMap(2, 1 if replication else 0)
         cluster = ClusterTopology(self.rmap.world_size, 1)
         pricing = pricing_from_ft(ft or FTConfig(), cluster)
@@ -66,6 +66,16 @@ class BatchFanout:
         self.transport = ReplicaTransport(self.rmap, 2,
                                           cost_model=pricing.cost_model)
         self.engine = CollectiveEngine(self.transport)
+        # observability (repro.obs): the fan-out traffic counts into the
+        # same recorder the serving session uses — per-band counters via
+        # the transport observer, per-link heat when priced
+        self.obs = obs
+        if obs is not None:
+            self.transport.add_observer(obs)
+            self.engine.obs = obs
+            if pricing.cost_model is not None and obs.links is None:
+                self.transport.link_usage = \
+                    obs.attach_links(pricing.cost_model)
         self.eps = {w: self.transport.register(w) for w in self.rmap.alive()}
         self.fanouts = 0
 
@@ -107,7 +117,7 @@ class ReplicatedServer:
 
     def __init__(self, arch: str, *, reduced: bool = True, batch: int = 4,
                  prompt_len: int = 32, replication: bool = True,
-                 seed: int = 0, topology: str = None):
+                 seed: int = 0, topology: str = None, obs=None):
         cfg = get_arch(arch)
         if reduced:
             cfg = cfg.reduced()
@@ -126,8 +136,15 @@ class ReplicatedServer:
         self.batch = batch
         self.prompt_len = prompt_len
         self.topology = topology
+        # one recorder shared by the fan-out transport and every serving
+        # session (obs=True builds it; None keeps everything unwired)
+        self.obs = None
+        if obs is not None:
+            from repro.obs import ObsRecorder
+            self.obs = ObsRecorder() if obs is True else obs
         self.fanout = BatchFanout(replication,
-                                  ft=FTConfig(mode="none", topology=topology))
+                                  ft=FTConfig(mode="none", topology=topology),
+                                  obs=self.obs)
         self.failures = 0
         self.promotions = 0
         self.last_report = None
@@ -160,7 +177,7 @@ class ReplicatedServer:
         return FTSession(ft=FTConfig(mode=mode, topology=self.topology),
                          injector=injector,
                          n_logical_workers=1, workers_per_node=1,
-                         allow_restart=False)
+                         allow_restart=False, obs=self.obs)
 
     def generate(self, prompt_tokens: np.ndarray, n_gen: int,
                  kill_at: int = -1) -> np.ndarray:

@@ -71,6 +71,8 @@ class RunResult:
     store_fallbacks: int = 0        # store unrecoverable -> harness snapshot
     wall_s: float = 0.0
     check_value: Optional[float] = None
+    obs: Optional[Any] = None       # the run's ObsRecorder (obs= wired)
+    obs_metrics: Optional[dict] = None   # its end-of-run snapshot()
 
     @property
     def efficiency(self) -> float:
@@ -119,7 +121,8 @@ class SimRuntime:
                  injector=None,
                  respawn_on_restart: bool = True,
                  drop_inflight_on_failure: bool = True,
-                 detect_divergence: bool = False):
+                 detect_divergence: bool = False,
+                 obs=None):
         self.app = app
         self.ft = ft
         self.n = app.n_ranks
@@ -191,6 +194,25 @@ class SimRuntime:
                                   graph=self.topo_graph)
         self.recovery = RecoveryManager(self.transport, store=self.store)
 
+        # observability (repro.obs): one recorder wired through every
+        # seam — the clock's charge hook, the transport's observer list
+        # (after any divergence detector: the raising tripwire keeps its
+        # first slot), the collective engine, and per-link utilization on
+        # priced runs.  obs=None (default) leaves every wired hot path a
+        # single falsy check with zero allocations (docs/obs_api.md).
+        self.obs = None
+        if obs is not None:
+            from repro.obs import ObsRecorder
+            self.obs = ObsRecorder() if obs is True else obs
+            self.obs.bind_clock(self.clock)
+            self.obs.set_world(self.n, self.m,
+                               injector_kind=type(self.injector).__name__)
+            self.transport.add_observer(self.obs)
+            if self.topo_costs is not None:
+                self.transport.link_usage = \
+                    self.obs.attach_links(self.topo_costs)
+            self.engine.obs = self.obs
+
         self.workers: Dict[int, _Worker] = {}
         for w in self.rmap.alive():
             role, rank = self.rmap.role_of(w)
@@ -246,6 +268,11 @@ class SimRuntime:
         return snap
 
     def _write_checkpoint(self, baseline: bool = False):
+        obs = self.obs
+        if obs is not None:
+            obs.span("ckpt.write", "ckpt", step=self.step_idx,
+                     baseline=baseline)
+            obs.metrics.inc("ckpt.writes")
         snap = self._snapshot()
         self._ckpt_mem = snap
         self.last_ckpt_step = self.step_idx
@@ -258,7 +285,11 @@ class SimRuntime:
             # traffic the save just generated.
             if self.topo_costs is not None:
                 self.clock.drain_comm(self.transport)
+            if obs is not None:
+                obs.span("store.push", "store", gen=self.store.next_gen)
             self.store.save(snap["step"], snap["ranks"])
+            if obs is not None:
+                obs.end_span(committed=self.store.committed)
             if self.topo_costs is not None:
                 topo_c = self.clock.drain_comm(self.transport)
         elif self.ckpt_dir:
@@ -279,12 +310,18 @@ class SimRuntime:
             for r in range(self.n):
                 self.transport.trim_wildcards(r)
             self.clock.charge("log_removal", self.costs.log_removal_cost_s)
+        if obs is not None:
+            obs.end_span()          # ckpt.write (dur = C + log removal)
         self.coords.restart_timer(self.clock.now)
 
     def _restore_checkpoint(self):
         """Elastic restart (paper §3.3): rebuild the world from the last
         checkpoint. With respawn, failed slots are refilled (same N+M);
         otherwise the replication degree shrinks to the surviving workers."""
+        obs = self.obs
+        if obs is not None:
+            obs.span("recovery.restart", "recovery", at_step=self.step_idx)
+            obs.metrics.inc("recovery.restarts")
         snap = self._ckpt_mem
         if self.store is None and self.ckpt_dir and os.path.exists(
                 os.path.join(self.ckpt_dir, "LATEST")):
@@ -319,8 +356,12 @@ class SimRuntime:
             self.store.rebind(topology=self.topology)
             if self.topo_costs is not None:
                 self.clock.drain_comm(self.transport)
+            if obs is not None:
+                obs.span("store.fetch", "store")
             try:
                 ranks, step = self.store.restore()
+                if obs is not None:
+                    obs.end_span(outcome="restored", step=step)
                 snap = {"step": step, "ranks": ranks}
                 self.result.store_restores += 1
                 if self.topo_costs is not None:
@@ -332,6 +373,8 @@ class SimRuntime:
             except StoreUnrecoverable:
                 # beyond the placement's tolerance: fall back to the
                 # harness's coordinated snapshot (counted, not hidden)
+                if obs is not None:
+                    obs.end_span(outcome="unrecoverable")
                 self.result.store_fallbacks += 1
                 restore_c = self.costs.restore_cost_s
 
@@ -345,7 +388,9 @@ class SimRuntime:
 
         self.step_idx = snap["step"]
         self.result.restarts += 1
-        self.clock.charge("restore", restore_c)
+        self.clock.charge("restore", restore_c, label="elastic_restart")
+        if obs is not None:
+            obs.end_span(to_step=self.step_idx)     # recovery.restart
 
     # --------------------------------------------------------------- failure
 
@@ -357,6 +402,13 @@ class SimRuntime:
         if not victims:
             return
         self.result.failures += len(victims)
+        obs = self.obs
+        if obs is not None:
+            kind = "node" if ev.node is not None or len(victims) > 1 \
+                else "worker"
+            obs.metrics.inc(f"failures.kills.{kind}", len(victims))
+            obs.mark("failure", "failure", workers=tuple(victims),
+                     node=ev.node, step=self.step_idx)
         # interception layer -> coordinators -> propagation (paper §6.1)
         self.coords.intercept_failure(victims)
         try:
@@ -375,12 +427,36 @@ class SimRuntime:
         self.engine.world_changed()
         promoted = [e for e in events if e["kind"] == "promote"]
         self.result.promotions += len(promoted)
+        if obs is not None:
+            # the promote arcs open BEFORE the repair charge so each
+            # span's virtual duration covers the booked repair time
+            for e in promoted:
+                obs.span("recovery.promote", "recovery", tid=e["rank"],
+                         worker=e["worker"], promoted=e["promoted"])
         # drain + replay on promoted workers (repro.comm.recovery)
-        self.clock.charge("repair", self.costs.repair_cost_s)
+        self.clock.charge("repair", self.costs.repair_cost_s,
+                          label="promotion")
         for e in promoted:
-            self.recovery.repair_promoted(self.workers[e["promoted"]].ep,
-                                          self.step_idx,
-                                          drop_inflight=self.drop_inflight)
+            ep = self.workers[e["promoted"]].ep
+            if obs is None:
+                self.recovery.repair_promoted(
+                    ep, self.step_idx, drop_inflight=self.drop_inflight)
+                continue
+            # traced repair: same drain-then-replay the manager performs,
+            # with each move marked as a child of the promote arc
+            rank = e["rank"]
+            dropped = 0
+            if self.drop_inflight:
+                before = len(ep.live_messages())
+                self.recovery.drain_current_step(ep, self.step_idx)
+                dropped = before - len(ep.live_messages())
+            obs.mark("drain", "recovery", tid=rank, dropped=dropped)
+            replayed = self.recovery.replay_to(ep)
+            obs.mark("replay", "recovery", tid=rank, messages=replayed)
+            obs.mark("promotion", "recovery", tid=rank,
+                     worker=e["promoted"])
+            obs.metrics.inc("recovery.promotions")
+            obs.end_span(tid=rank, replayed=replayed)
 
     # ------------------------------------------------------------------ step
 
@@ -528,13 +604,19 @@ class SimRuntime:
         # step boundary is pinned to step_end even when mid-step repair
         # charges moved the clock (pre-clock behavior, kept bitwise)
         self.clock.advance_to(step_end)
+        comm_items = ()
         if self.topo_costs is not None:
+            if self.obs is not None:
+                # per-sender accrual, captured before charge_comm drains
+                # it (the obs comm spans show who waited, not just max)
+                comm_items = tuple(self.transport.comm_time.items())
             # α‑β-priced message time of this step (max over workers:
             # senders serialize on their own port, workers run in
             # parallel) — a virtual-time component the flat model folds
             # into step_time_s
             self.clock.charge_comm(self.transport)
-        if self.step_idx < self.max_step_done:
+        rolled_back = self.step_idx < self.max_step_done
+        if rolled_back:
             # re-executing work lost to a rollback (paper Fig 9 'rollback');
             # ledger-only: the schedule clock already sits at step_end
             self.clock.charge("rollback", self.costs.step_time_s,
@@ -547,6 +629,11 @@ class SimRuntime:
             # replica share is redundant work (paper Fig 9 accounting is on
             # processor-seconds: half the machine redoes the other half)
             self.clock.charge("redundant", 0.0, advance=False)
+        if self.obs is not None:
+            self.obs.on_step(self.step_idx,
+                             step_end - self.costs.step_time_s,
+                             self.costs.step_time_s, rolled_back, self.n,
+                             comm_items, self.rmap.role_of)
         self.step_idx += 1
         self.result.steps_done = self.step_idx
 
@@ -592,4 +679,12 @@ class SimRuntime:
         self.result.wall_s = _time.perf_counter() - wall0
         if hasattr(self.app, "check"):
             self.result.check_value = self.app.check(self.result.states)
+        if self.obs is not None:
+            self.obs.sample_transport(self.transport)
+            if self.store is not None:
+                self.obs.sample_store(self.store)
+            if self.obs.tracer is not None:
+                self.obs.tracer.finish()
+            self.result.obs = self.obs
+            self.result.obs_metrics = self.obs.snapshot()
         return self.result

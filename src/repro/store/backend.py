@@ -123,9 +123,22 @@ class MemBackend:
         clock = getattr(self.session, "clock", None)
         return clock.cost_model if clock is not None else None
 
+    def _observe(self, transport):
+        """Wire the session's ObsRecorder (if any) into a store transport:
+        push/fetch traffic counts into the same per-band counters and
+        per-link heat as every other message."""
+        obs = getattr(self.session, "obs", None)
+        if obs is not None:
+            transport.add_observer(obs)
+            if transport.cost_model is not None:
+                if obs.links is None:
+                    obs.attach_links(transport.cost_model)
+                transport.link_usage = obs.links
+        return transport
+
     def _build(self, rmap, topology) -> MemStore:
-        transport = ReplicaTransport(rmap, rmap.n,
-                                     cost_model=self._cost_model())
+        transport = self._observe(
+            ReplicaTransport(rmap, rmap.n, cost_model=self._cost_model()))
         for w in rmap.alive():
             transport.register(w)
         graph = getattr(getattr(self.session, "pricing", None), "graph",
@@ -163,8 +176,9 @@ class MemBackend:
         sess = self.session
         # the session swapped in the restarted fabric before calling us:
         # rebuild the store world on it (shard memory carries over)
-        transport = ReplicaTransport(sess.rmap, sess.rmap.n,
-                                     cost_model=self._cost_model())
+        transport = self._observe(
+            ReplicaTransport(sess.rmap, sess.rmap.n,
+                             cost_model=self._cost_model()))
         for w in sess.rmap.alive():
             transport.register(w)
         self.store.rebind(topology=sess.topology, transport=transport)

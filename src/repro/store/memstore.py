@@ -109,6 +109,11 @@ class MemStore:
         self.fetches = 0
         self.local_reads = 0
         self.direct_salvages = 0
+        # generation lifecycle counters (observability): committed = made
+        # durable by try_commit; abandoned = pruned before completing (a
+        # partner died mid-round and a newer generation committed past it)
+        self.gens_committed = 0
+        self.gens_abandoned = 0
 
     # ------------------------------------------------------------- lifecycle
 
@@ -341,6 +346,7 @@ class MemStore:
         meta["manifest"] = coll.resolve(0, pend[0])
         meta["complete"] = True
         self.committed = gen
+        self.gens_committed += 1
         self.committed_bytes = sum(info["nbytes"]
                                    for info in meta["owners"].values())
         # prune: older generations (including abandoned ones) are dead now
@@ -348,6 +354,8 @@ class MemStore:
             for key in [k for k in ws if k[1] < gen]:
                 del ws[key]
         for g in [g for g in self.gens if g < gen]:
+            if not self.gens[g]["complete"]:
+                self.gens_abandoned += 1
             del self.gens[g]
         return True
 

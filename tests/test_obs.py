@@ -1,0 +1,426 @@
+"""repro.obs: the span tracer, the metrics registry, per-link heat, the
+Chrome-trace/flamegraph exporters, and the whole-stack wiring — the
+transport observer list (divergence detector first), the clock charge
+hook, the FTSession/SimRuntime recovery arcs — plus the obs-off
+zero-wiring contract and the ``no-print`` lint rule that polices it.
+"""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.analyze import lint_source
+from repro.clock import VirtualClock
+from repro.configs.base import FTConfig
+from repro.core.failure_sim import FailureEvent
+from repro.ft import FTSession
+from repro.obs import (Histogram, MetricsRegistry, ObsRecorder, RUNTIME_TID,
+                       SpanTracer, chrome_trace, text_flamegraph,
+                       time_distribution)
+from repro.obs.demo import traced_hpcg_run
+from repro.simrt import SimRuntime
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# bands the sender logs record (store pushes are sent with log=False)
+LOGGED_BANDS = ("app", "coll", "topo", "reserved")
+
+
+# ----------------------------------------------------------------- metrics
+
+def test_metrics_registry_basics():
+    m = MetricsRegistry()
+    m.inc("a.b")
+    m.inc("a.b", 2)
+    m.set_gauge("g", 7.5)
+    m.observe("h", 0.5)
+    m.observe("h", 3.0)
+    assert m.get("a.b") == 3 and m.get("g") == 7.5
+    assert m.get("missing", -1) == -1
+    snap = m.snapshot()
+    assert snap["counters"] == {"a.b": 3}
+    assert snap["gauges"] == {"g": 7.5}
+    h = snap["histograms"]["h"]
+    assert h["count"] == 2 and h["sum"] == 3.5
+    assert h["min"] == 0.5 and h["max"] == 3.0 and h["mean"] == 1.75
+    # snapshot is JSON-safe
+    json.loads(json.dumps(snap))
+
+
+def test_histogram_power_of_two_buckets():
+    h = Histogram()
+    for v in (0.3, 0.6, 1.5, 3.0, 0.0):
+        h.observe(v)
+    d = h.as_dict()
+    # bucket e holds (2^(e-1), 2^e]: 0.3 -> -1; 0.6 and 0.0 -> 0;
+    # 1.5 -> 1; 3.0 -> 2
+    assert d["buckets"] == {"-1": 1, "0": 2, "1": 1, "2": 1}
+    assert d["count"] == 5 and d["max"] == 3.0 and d["min"] == 0.0
+
+
+def test_time_distribution_pinning():
+    bk = {"useful": 80.0, "comm": 10.0, "ckpt_write": 10.0,
+          "redundant": 0.0, "total": 100.0}
+    comp = time_distribution(bk)
+    assert comp["useful"] == 80.0 and comp["comm"] == 10.0
+    assert "total" not in comp
+    # full replication: half the machine redoes the other half
+    comp = time_distribution(bk, 0.5)
+    assert comp["useful"] == 40.0 and comp["redundant"] == 40.0
+    # an uneven replica share splits proportionally
+    comp = time_distribution(bk, 0.25)
+    assert comp["useful"] == 60.0 and comp["redundant"] == 20.0
+    with pytest.raises(ValueError):
+        time_distribution(bk, 1.0)
+    with pytest.raises(ValueError):
+        time_distribution(bk, -0.1)
+    # an all-zero ledger yields all-zero percentages, not NaN
+    assert set(time_distribution({"useful": 0.0}).values()) == {0.0}
+
+
+def test_fig9_uses_the_shared_accounting():
+    """The figure benchmark and the obs snapshot share one
+    implementation — they can never disagree."""
+    sys.path.insert(0, REPO_ROOT)        # benchmarks/ lives at the root
+    try:
+        from benchmarks import fig9_time_distribution as fig9
+    finally:
+        sys.path.pop(0)
+    assert fig9.time_distribution is time_distribution
+
+
+# ------------------------------------------------------------------ tracer
+
+def test_tracer_nesting_and_finish():
+    tr = SpanTracer()
+    clock = VirtualClock()
+    tr.clock = clock
+    outer = tr.begin(RUNTIME_TID, "outer", "test")
+    clock.charge("useful", 1.0)
+    inner = tr.begin(RUNTIME_TID, "inner", "test")
+    mark = tr.instant(RUNTIME_TID, "mark", "test", x=1)
+    assert mark.parent == inner
+    clock.charge("useful", 0.5)
+    tr.end(RUNTIME_TID, note="done")
+    assert tr.spans[inner].dur == 0.5
+    assert tr.spans[inner].parent == outer
+    assert tr.spans[inner].args["note"] == "done"
+    assert len(tr.open_spans()) == 1
+    tr.finish()
+    assert tr.open_spans() == []
+    assert tr.spans[outer].dur == 1.5
+    with pytest.raises(RuntimeError):
+        tr.end(RUNTIME_TID)
+
+
+def test_tracer_complete_is_parented_and_cheap():
+    tr = SpanTracer()
+    outer = tr.begin(3, "outer")
+    tr.complete(3, "step", "compute", 2.0, 1.0, {"step": 2})
+    tr.end(3)
+    (step,) = tr.find("step")
+    assert step.parent == outer and step.ts == 2.0 and step.dur == 1.0
+
+
+# --------------------------------------------------- transport observer list
+
+class PingApp:
+    """Two ranks swap their state vector every step."""
+
+    def __init__(self, n_ranks: int = 2):
+        self.n_ranks = n_ranks
+
+    def init_state(self, rank: int) -> dict:
+        return {"v": np.arange(4, dtype=np.float64) + rank}
+
+    def step(self, rank, state, t):
+        peer = 1 - rank
+        yield ("send", peer, 0, state["v"])
+        got = yield ("recv", peer, 0)
+        return {"v": state["v"] + got}
+
+
+def test_observer_list_ordering_and_legacy_property():
+    rt = SimRuntime(PingApp(), FTConfig(mode="none"))
+    calls = []
+
+    class Probe:
+        def __init__(self, name):
+            self.name = name
+
+        def on_send(self, *a):
+            calls.append(self.name)
+
+    a, b = Probe("a"), Probe("b")
+    rt.transport.add_observer(a)
+    rt.transport.add_observer(b, first=True)
+    assert rt.transport.observers == [b, a]
+    # legacy single-observer view: the first registered observer
+    assert rt.transport.observer is b
+    rt.run(1)
+    assert calls[:2] == ["b", "a"]
+    rt2 = SimRuntime(PingApp(), FTConfig(mode="none"))
+    rt2.transport.remove_observer(rt2.transport.observer) \
+        if rt2.transport.observers else None
+    assert rt2.transport.observers == []
+
+
+def test_divergence_detector_and_recorder_coexist():
+    """Regression for the observer seam: the divergence tripwire and the
+    obs recorder both see every send of a killed-and-replayed run, with
+    the detector ordered first."""
+    ft = FTConfig(mode="replication", replication_degree=1.0, mtbf_s=1e9)
+    events = [FailureEvent(time_s=2.5, workers=(0,))]
+    rt = SimRuntime(PingApp(), ft, detect_divergence=True,
+                    failure_events=events, obs=True)
+    assert rt.transport.observers[0] is rt.divergence
+    assert rt.transport.observers[1] is rt.obs
+    res = rt.run(6)
+    assert res.failures == 1 and res.promotions == 1 and res.replays > 0
+    assert rt.divergence.compared > 0 and rt.divergence.divergences == []
+    c = rt.obs.metrics.counters
+    assert c["comm.msgs.app.cmp"] > 0
+    assert c["recovery.promotions"] == 1
+    assert res.obs_metrics is not None
+
+
+# -------------------------------------------------- the traced kill scenario
+
+@pytest.fixture(scope="module")
+def killed_run():
+    """HPCG, combined strategy, fat-tree pricing, one node killed mid-run
+    (the acceptance scenario at a test-sized scale)."""
+    rt, res, obs = traced_hpcg_run(16, steps=8, grid=(4, 4, 2))
+    return rt, res, obs
+
+
+def test_killed_run_exercised_recovery(killed_run):
+    _rt, res, obs = killed_run
+    assert res.failures > 0 and res.promotions > 0 and res.replays > 0
+    c = obs.metrics.counters
+    assert c["failures.kills.node"] == res.failures
+    assert c["recovery.promotions"] == res.promotions
+    assert c["steps.executed"] >= 8
+
+
+def test_trace_spans_all_closed_and_nested(killed_run):
+    _rt, _res, obs = killed_run
+    tr = obs.tracer
+    assert tr.open_spans() == []
+    for s in tr.spans:
+        assert s.instant or s.dur is not None
+        if s.parent >= 0:
+            parent = tr.spans[s.parent]
+            assert parent.tid == s.tid
+            # child lies within the parent's [ts, ts+dur] window
+            assert s.ts >= parent.ts - 1e-9
+            if s.dur is not None and parent.dur is not None:
+                assert s.ts + s.dur <= parent.ts + parent.dur + 1e-9
+
+
+def test_recovery_arcs_have_drain_replay_promotion(killed_run):
+    _rt, _res, obs = killed_run
+    tr = obs.tracer
+    promotes = [i for i, s in enumerate(tr.spans)
+                if s.name == "recovery.promote"]
+    assert promotes
+    for idx in promotes:
+        kids = {s.name for s in tr.children_of(idx)}
+        assert {"drain", "replay", "promotion"} <= kids
+    assert tr.find("failure") and tr.find("ckpt.write") \
+        and tr.find("store.push")
+
+
+def test_chrome_trace_round_trip_monotone(killed_run):
+    _rt, _res, obs = killed_run
+    data = json.loads(json.dumps(chrome_trace(obs.tracer, obs.snapshot())))
+    events = data["traceEvents"]
+    names = {e["name"] for e in events}
+    assert {"failure", "recovery.promote", "drain", "replay",
+            "promotion"} <= names
+    # thread_name metadata labels every track
+    meta = {e["tid"]: e["args"]["name"] for e in events
+            if e.get("ph") == "M"}
+    assert meta[RUNTIME_TID] == "runtime" and meta[0] == "rank 0"
+    last = {}
+    for e in events:
+        if e.get("ph") not in ("X", "i"):
+            continue
+        assert e["ts"] >= last.get(e["tid"], float("-inf"))
+        last[e["tid"]] = e["ts"]
+
+
+def test_text_flamegraph_renders(killed_run):
+    _rt, _res, obs = killed_run
+    out = text_flamegraph(obs.tracer)
+    assert "step" in out and "recovery.promote" in out
+    assert text_flamegraph(SpanTracer()) == "(no closed spans)\n"
+
+
+def test_band_bytes_reconcile_with_sender_logs(killed_run):
+    """The per-band cmp counters and the sender logs price the same
+    traffic: store pushes are log=False, everything else is recorded."""
+    rt, _res, obs = killed_run
+    c = obs.metrics.counters
+    obs_bytes = sum(c.get(f"comm.bytes.{b}.cmp", 0) for b in LOGGED_BANDS)
+    obs_msgs = sum(c.get(f"comm.msgs.{b}.cmp", 0) for b in LOGGED_BANDS)
+    log_bytes = sum(lg.recorded_bytes
+                    for lg in rt.transport.send_logs.values())
+    log_msgs = sum(lg.recorded_msgs
+                   for lg in rt.transport.send_logs.values())
+    assert obs_bytes == log_bytes > 0
+    assert obs_msgs == log_msgs > 0
+    # and the store band saw the checkpoint pushes the logs don't record
+    assert c["comm.bytes.store.cmp"] > 0
+
+
+def test_link_usage_measured(killed_run):
+    rt, _res, obs = killed_run
+    links = obs.links
+    assert links is rt.transport.link_usage
+    worst = links.max_contended()
+    assert worst is not None and worst[1] > 0
+    rows = links.table(top=5)
+    assert rows and all(rows[i]["busy_s"] >= rows[i + 1]["busy_s"]
+                        for i in range(len(rows) - 1))
+    # traffic classes attributed: app halos + store pushes at minimum
+    assert "app" in links.by_label
+    assert any(lbl != "app" for lbl in links.by_label)
+    d = links.as_dict()
+    json.loads(json.dumps(d))
+    assert d["max_contended"]["busy_s"] == worst[1]
+
+
+def test_snapshot_time_distribution(killed_run):
+    _rt, res, obs = killed_run
+    snap = res.obs_metrics
+    td = snap["time_distribution"]
+    # fully replicated run: useful == redundant by construction
+    assert td["useful"] == pytest.approx(td["redundant"])
+    assert sum(td.values()) == pytest.approx(100.0)
+    assert snap["world"]["n"] == 16 and snap["world"]["m"] == 16
+    json.loads(json.dumps(snap))
+
+
+# ------------------------------------------------------------- obs-off path
+
+def test_obs_off_wires_nothing():
+    rt = SimRuntime(PingApp(), FTConfig(mode="replication",
+                                        replication_degree=1.0))
+    assert rt.obs is None
+    assert rt.transport.observers == []
+    assert rt.transport.link_usage is None
+    assert rt.clock.obs is None
+    assert rt.engine.obs is None
+    res = rt.run(2)
+    assert res.obs is None and res.obs_metrics is None
+
+
+def test_clock_charge_label_without_obs():
+    clock = VirtualClock()
+    clock.charge("ckpt_write", 1.0, label="MemBackend")
+    assert clock.breakdown.ckpt_write == 1.0
+
+
+# ------------------------------------------------------------ FTSession path
+
+class CounterWorkload:
+    disk_checkpointable = False
+
+    def init_state(self):
+        return {"x": np.float64(1.0)}
+
+    def step(self, state, t):
+        x = state["x"] * 1.0000001 + np.sin(0.1 * t)
+        return {"x": x}, float(x)
+
+
+def test_ft_session_obs_counters_and_spans():
+    session = FTSession(ft=FTConfig(mode="combined", ckpt_interval_s=4.0),
+                        injector={6: [0]}, n_logical_workers=4,
+                        workers_per_node=4, obs=True)
+    rep = session.run(CounterWorkload(), 12)
+    assert rep.failures == 1 and rep.promotions == 1
+    c = session.obs.metrics.counters
+    assert c["ckpt.writes"] == rep.ckpt_writes >= 1
+    assert c["failures.kills.worker"] == 1
+    assert c["steps.executed"] == 12
+    assert "time.ckpt_write_s.MemBackend" in c
+    assert "time.repair_s.promote" in c
+    tr = session.obs.tracer
+    assert tr.open_spans() == []
+    assert tr.find("ckpt.write") and tr.find("failure")
+    (arc,) = [s for s in tr.spans if s.name == "recovery.promote"]
+    assert arc.dur is not None
+    # the snapshot rides the report without displacing the per-step
+    # workload scalars in rep.metrics
+    assert rep.obs_metrics["counters"] == dict(sorted(c.items()))
+    assert len(rep.metrics) == 12
+    g = session.obs.metrics.gauges
+    assert g["store.gens_committed"] >= 1
+    # the store transport carries only log=False pushes; the band
+    # counters still saw them
+    assert c["comm.msgs.store.cmp"] > 0
+
+
+def test_recovery_latency_histogram():
+    session = FTSession(ft=FTConfig(mode="replication"),
+                        injector={3: [0], 7: [1]}, n_logical_workers=4,
+                        obs=True)
+    session.run(CounterWorkload(), 10)
+    h = session.obs.metrics.histograms["recovery.latency_s"]
+    assert h.count == 2 and h.max > 0
+
+
+# --------------------------------------------------------------- CLI / demo
+
+def test_cli_trace_and_metrics(tmp_path):
+    from repro.obs.__main__ import main
+    trace_path = str(tmp_path / "run.json")
+    metrics_path = str(tmp_path / "metrics.json")
+    assert main(["trace", trace_path, "--ranks", "8", "--steps", "6"]) == 0
+    assert main(["metrics", metrics_path, "--ranks", "8",
+                 "--steps", "6"]) == 0
+    with open(trace_path) as f:
+        trace = json.load(f)
+    assert trace["traceEvents"]
+    with open(metrics_path) as f:
+        metrics = json.load(f)
+    assert metrics["counters"]["steps.executed"] >= 6
+    assert "time_distribution" in metrics
+
+
+# ------------------------------------------------------------ no-print lint
+
+def test_no_print_flags_library_modules():
+    fs = lint_source("def f():\n    print('hi')\n", "src/repro/x/mod.py")
+    assert any(f.rule == "no-print" for f in fs)
+
+
+def test_no_print_exempts_cli_modules():
+    src = "def f():\n    print('hi')\n"
+    assert not [f for f in lint_source(src, "src/repro/x/__main__.py")
+                if f.rule == "no-print"]
+    cli = "def main(argv=None):\n    print('hi')\n    return 0\n"
+    assert not [f for f in lint_source(cli, "src/repro/x/serve.py")
+                if f.rule == "no-print"]
+
+
+def test_no_print_allow_comment():
+    src = ("def f():\n"
+           "    # repro: allow[no-print] -- operator-facing\n"
+           "    print('hi')\n")
+    assert not [f for f in lint_source(src, "src/repro/x/mod.py")
+                if f.rule == "no-print"]
+
+
+def test_no_print_ignores_method_named_main():
+    src = ("class C:\n"
+           "    def main(self):\n"
+           "        pass\n"
+           "def f():\n"
+           "    print('x')\n")
+    assert [f for f in lint_source(src, "src/repro/x/mod.py")
+            if f.rule == "no-print"]
