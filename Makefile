@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test lint analyze mypy check bench bench-smoke bench-store \
-    bench-topo bench-clock bench-scale bench-obs
+    bench-topo bench-clock bench-scale bench-obs bench-pool
 
 test:
 	$(PY) -m pytest -x -q
@@ -36,7 +36,7 @@ bench:
 
 # the cheap failure-pipeline subset CI runs on every push
 bench-smoke:
-	$(PY) -m benchmarks.run --only fig13_log_replay --only fig9_time_distribution --only fig14_memstore --only fig15_topology --only clock_breakdown
+	$(PY) -m benchmarks.run --only fig13_log_replay --only fig9_time_distribution --only fig14_memstore --only fig15_topology --only fig16_taskpool --only clock_breakdown
 
 # the disk-vs-memory checkpoint backend comparison (repro.store)
 bench-store:
@@ -55,6 +55,11 @@ bench-clock:
 # the obs-on overhead gate).
 bench-scale:
 	$(PY) -m benchmarks.bench_scale
+
+# elastic task-pool goodput under failures (repro.pool, docs/pool_api.md):
+# goodput + p99 latency vs MTTI x FT configuration, numpy-only
+bench-pool:
+	$(PY) -m benchmarks.run --only fig16_taskpool
 
 # observability smoke (docs/obs_api.md): traced HPCG@64 with a mid-run
 # node kill; asserts the trace/metrics artifacts parse, the recovery

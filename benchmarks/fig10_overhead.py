@@ -9,9 +9,13 @@ Here (real wall-clock measurement): the SAME jitted LM train step, warm,
 driven (a) by a bare Python loop and (b) by FTSession with the full FT
 machinery active (coordinators, failure polling, replica-map bookkeeping,
 deterministic data cursor) but no failures, no checkpoints, and the
-replica slice's redundant compute excluded on both sides — exactly the
-paper's accounting, which charges redundancy to the 50% efficiency factor,
-not to the library."""
+replica slice's redundant compute excluded from the WALL measurement on
+both sides.  The virtual-time ledger row, by contrast, now books the
+replica processor-seconds as an explicit ``redundant`` component
+(FTSession charges the live replicated share of the machine per step)
+instead of folding them into a 50% efficiency factor — so the breakdown
+row shows the paper's useful/redundant split directly, while the wall
+overhead number stays a pure library-interception measurement."""
 import time
 
 from repro.configs.base import FTConfig

@@ -22,8 +22,8 @@ def main(argv=None) -> None:
     # only installs numpy
     names = ["table1_intervals", "fig7_8_hpcg", "fig9_time_distribution",
              "fig10_overhead", "fig11_12_apps", "fig13_log_replay",
-             "fig14_memstore", "fig15_topology", "clock_breakdown",
-             "roofline_report"]
+             "fig14_memstore", "fig15_topology", "fig16_taskpool",
+             "clock_breakdown", "roofline_report"]
     if args.only:
         unknown = [n for n in args.only if n not in names]
         if unknown:

@@ -32,9 +32,11 @@ those invariants as five rules over ``src/repro``:
   no-print            bare ``print(...)`` in library modules: runtime
                       state belongs in the repro.obs surfaces (metrics /
                       traces) or in a returned result, not on stdout.
-                      CLI modules are exempt — a ``__main__.py``, or any
-                      module defining a top-level ``main()`` entry point
-                      (benchmarks/ lives outside the lint root entirely)
+                      CLI modules are exempt — a ``__main__.py``, any
+                      module defining a top-level ``main()`` entry point,
+                      or a module on the explicit ``_CLI_MODULE_SUFFIXES``
+                      list (benchmarks/ lives outside the lint root
+                      entirely)
 
 Suppression: a finding is suppressed by ``# repro: allow[rule]`` (comma
 separated rule ids; ``allow[*]`` allows everything) on the finding's line
@@ -66,6 +68,11 @@ RULES: Dict[str, str] = {
 
 # the comm hot paths the deepcopy rule polices (path fragments)
 _DEEPCOPY_PATHS = ("repro/comm/",)
+
+# explicit no-print exemptions: CLI-facing library modules that are
+# neither a __main__.py nor a top-level main() module (path suffixes,
+# "/"-normalized).  repro/pool/demo.py backs `python -m repro.pool`.
+_CLI_MODULE_SUFFIXES = ("repro/pool/demo.py",)
 
 _ALLOW_RE = re.compile(r"#\s*repro:\s*allow\[([^\]]*)\]")
 
@@ -146,7 +153,9 @@ class _Linter(ast.NodeVisitor):
         # no-print: findings held back until the whole module is seen —
         # a later top-level ``def main`` still marks the module as a CLI
         self.print_findings: List[Finding] = []
-        self.is_cli = os.path.basename(path) == "__main__.py"
+        norm = path.replace(os.sep, "/")
+        self.is_cli = os.path.basename(path) == "__main__.py" or \
+            any(norm.endswith(sfx) for sfx in _CLI_MODULE_SUFFIXES)
 
     # -- helpers -------------------------------------------------------------
 

@@ -83,9 +83,14 @@ class _Rank:
 
 
 class _Verifier:
-    def __init__(self, sched: Schedule, n: Optional[int], label: str):
+    def __init__(self, sched: Schedule, n: Optional[int], label: str,
+                 infra_owners: Sequence[str] = ()):
         self.n = n if n is not None else (max(sched) + 1 if sched else 0)
         self.label = label
+        # subsystems whose own reserved bands the schedule may use: an
+        # infra subsystem verifying its hand-written protocol (e.g. the
+        # repro.pool master/worker rounds) runs on its registered band
+        self.infra_owners = tuple(infra_owners)
         self.ranks = {r: _Rank(sched.get(r, ())) for r in range(self.n)}
         self.inbox: Dict[int, List[_Token]] = {r: [] for r in range(self.n)}
         self.contrib: Dict[tuple, Set[int]] = {}   # switchboard table
@@ -127,6 +132,8 @@ class _Verifier:
         if not isinstance(tag, int) or tag >= 0:
             return
         owner = band_owner(tag)
+        if owner is not None and owner in self.infra_owners:
+            return                   # the schedule's own registered band
         owned = f", reserved by {owner}" if owner else \
             " in the reserved negative space"
         self._emit(rank, opidx, "tag-reserved",
@@ -397,11 +404,15 @@ class _Verifier:
 
 
 def verify_schedule(sched: Schedule, n: Optional[int] = None,
-                    label: str = "schedule") -> List[Finding]:
+                    label: str = "schedule",
+                    infra_owners: Sequence[str] = ()) -> List[Finding]:
     """Statically verify one per-rank op schedule; empty list == clean
     (warnings such as wildcard-ambiguity count as findings but not
-    errors — filter with findings.errors())."""
-    return _Verifier(sched, n, label).run()
+    errors — filter with findings.errors()).  ``infra_owners`` names
+    reserved-band owners (repro.analyze.tags.RESERVED_BANDS) whose tags
+    the schedule legitimately uses — for verifying an infra subsystem's
+    own hand-written protocol on its registered band."""
+    return _Verifier(sched, n, label, infra_owners).run()
 
 
 # --------------------------------------------------------------------------

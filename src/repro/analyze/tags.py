@@ -16,6 +16,7 @@ RESERVED_BANDS: Tuple[Tuple[str, int, int], ...] = (
     ("repro.comm.collectives", -18, -11),
     ("repro.store.memstore", -24, -21),
     ("repro.topo.algorithms", -38, -31),
+    ("repro.pool.master", -44, -41),
 )
 
 # the full reserved envelope apps must stay out of (paper-style contract:
@@ -37,11 +38,12 @@ def reserved_tags() -> Dict[int, str]:
     registers today (imported from the owning modules, so this cannot
     drift from the implementation)."""
     from repro.comm import collectives
+    from repro.pool import master
     from repro.store import memstore
     from repro.topo import algorithms
 
     out: Dict[int, str] = {}
-    for mod in (collectives, memstore, algorithms):
+    for mod in (collectives, memstore, algorithms, master):
         for name in dir(mod):
             if name.startswith("TAG_") and isinstance(
                     getattr(mod, name), int):
@@ -54,4 +56,4 @@ def in_infra_module(path: str) -> bool:
     reserved (negative) tags."""
     norm = path.replace("\\", "/")
     return any(part in norm for part in
-               ("/comm/", "/store/", "/topo/"))
+               ("/comm/", "/store/", "/topo/", "/pool/"))

@@ -18,16 +18,24 @@ drain, which workers were promoted) stays with the runtime.
 from __future__ import annotations
 
 from repro.comm.transport import Endpoint, ReplicaTransport
+from repro.core.message_log import payload_nbytes
 
 
 class RecoveryManager:
     """``store`` optionally attaches a repro.store.MemStore: worker deaths
     reported through ``note_dead`` then also kill that worker's in-memory
-    shard copies (partner memory dies with its host process)."""
+    shard copies (partner memory dies with its host process).
 
-    def __init__(self, transport: ReplicaTransport, store=None):
+    ``price_replay=True`` accrues each replayed message's α‑β cost on the
+    surviving sender through the transport's cost model (no-op without
+    one) — the caller then books ``transport.take_comm_time()`` as the
+    measured per-message repair instead of a flat estimate."""
+
+    def __init__(self, transport: ReplicaTransport, store=None,
+                 price_replay: bool = False):
         self.transport = transport
         self.store = store
+        self.price_replay = price_replay
         self.replays = 0
 
     def note_dead(self, workers) -> None:
@@ -60,6 +68,11 @@ class RecoveryManager:
                 # be redelivered as-is, no defensive copy
                 t.deliver(ep, m)
                 n_replayed += 1
+                if self.price_replay and t.cost_model is not None:
+                    src_wid = t.rmap.cmp.get(m.src)
+                    if src_wid is not None:
+                        t._charge(src_wid, ep.wid,
+                                  payload_nbytes(m.payload), m.tag)
         self.replays += n_replayed
         return n_replayed
 

@@ -47,6 +47,11 @@ class ReplicaMap:
     cmp: Dict[int, Optional[int]] = field(default_factory=dict)
     rep: Dict[int, Optional[int]] = field(default_factory=dict)
     dead: Set[int] = field(default_factory=set)
+    # ranks taken out of service by an elastic workload (repro.pool):
+    # unlike a dead rank these are a *planned* shrink — the invariants
+    # tolerate them and restart_map forgets them (a fresh world respawns
+    # every rank)
+    retired: Set[int] = field(default_factory=set)
     promotions: int = 0
     # worker -> (role, rank) reverse index, maintained by every mutation:
     # role_of is called once per send and once per worker per step, so a
@@ -99,6 +104,11 @@ class ReplicaMap:
     def rank_alive(self, rank: int) -> bool:
         return self.cmp[rank] is not None
 
+    def active_ranks(self) -> List[int]:
+        """Ranks still in service (live cmp worker, not retired)."""
+        return [r for r in range(self.n)
+                if r not in self.retired and self.cmp[r] is not None]
+
     def replication_degree(self) -> float:
         return len(self.replicated_ranks()) / self.n
 
@@ -130,6 +140,23 @@ class ReplicaMap:
             return {"kind": "promote", "worker": worker, "rank": rank,
                     "promoted": promoted}
         return {"kind": "noop", "worker": worker}
+
+    def retire_rank(self, rank: int) -> dict:
+        """Take a logical rank out of service (elastic task-pool shrink,
+        the forward-recovery alternative to ApplicationDead): both of its
+        workers are recorded dead, the slot is cleared, and the rank joins
+        ``retired`` — the invariants accept the hole and the remaining
+        world continues without a restart.  Returns the event dict."""
+        dropped = []
+        for wid in (self.cmp.get(rank), self.rep.get(rank)):
+            if wid is not None:
+                self.dead.add(wid)
+                self._roles.pop(wid, None)
+                dropped.append(wid)
+        self.cmp[rank] = None
+        self.rep[rank] = None
+        self.retired.add(rank)
+        return {"kind": "retire_rank", "rank": rank, "workers": dropped}
 
     def fail_many(self, workers) -> List[dict]:
         """Simultaneous (node-level) failure: all deaths are recorded before
@@ -185,6 +212,10 @@ class ReplicaMap:
     def check_invariants(self) -> None:
         seen = set()
         for r in range(self.n):
+            if r in self.retired:
+                assert self.cmp[r] is None and self.rep[r] is None, \
+                    f"retired rank {r} still holds workers"
+                continue
             c = self.cmp[r]
             assert c is not None, f"rank {r} has no computational worker"
             assert c not in self.dead, f"rank {r} cmp worker {c} is dead"

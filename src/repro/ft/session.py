@@ -107,6 +107,7 @@ class FTSession:
                  simulate_replica: bool = True,
                  step_time_s: float = 1.0,
                  allow_restart: bool = True,
+                 replicable_ranks: Optional[int] = None,
                  obs=None):
         if strategy is None:
             strategy = make_strategy(ft or FTConfig())
@@ -118,6 +119,11 @@ class FTSession:
         self.simulate_replica = simulate_replica and strategy.wants_replica
         self.step_time_s = step_time_s
         self.allow_restart = allow_restart
+        # cap on how many logical ranks the replication degree applies to:
+        # a workload with a placement-pinned unreplicated rank (the pool
+        # master, serve's frontend) passes n-1 so replicas cover exactly
+        # the worker ranks (replicas attach to ranks 0..m-1)
+        self.replicable_ranks = replicable_ranks
         self.ckpt_dir = ckpt_dir
         self.ckpt = None
         # observability (repro.obs): obs=True builds a recorder, or pass
@@ -130,7 +136,9 @@ class FTSession:
 
     def _init_fabric(self):
         n = self.n_logical_workers
-        m = self.strategy.n_replica_workers(n)
+        base = n if self.replicable_ranks is None \
+            else max(0, min(self.replicable_ranks, n))
+        m = self.strategy.n_replica_workers(base)
         self.rmap = ReplicaMap(n, m)
         self.topology = ClusterTopology(self.rmap.world_size,
                                         self.workers_per_node)
@@ -160,6 +168,11 @@ class FTSession:
         # (repro.store.make_backend) and re-points the self.ckpt alias
         self.ckpt = None
 
+        # session-aware workloads (repro.pool) build their transport over
+        # this run's fabric before init_state constructs the world state
+        bind = getattr(workload, "bind_session", None)
+        if bind is not None:
+            bind(self)
         state = workload.init_state()
         strat = self.strategy
         strat.on_start(workload, state, rep)
@@ -185,16 +198,21 @@ class FTSession:
                     obs.metrics.inc("failures.kills.worker", len(fresh))
                     obs.mark("failure", "failure", workers=tuple(fresh),
                              step=step)
+                # elastic-workload absorption: a task pool can take a
+                # fatal (unreplicated-cmp) death forward — retire the
+                # rank, reassign its work — instead of the world restart
+                # plan_recovery would be forced into
+                absorb = getattr(workload, "absorb_failures", None)
+                if absorb is not None:
+                    state, fresh = absorb(state, list(fresh), step, rep)
+                    if not fresh:
+                        continue
                 self.rmap, plan = plan_recovery(
                     self.rmap, fresh,
                     last_ckpt_step=strat.last_ckpt_step, current_step=step,
                     store=strat.recovery_store())
                 if obs is not None:
                     obs.span(f"recovery.{plan.kind}", "recovery", step=step)
-                # shrink + message recovery (paper Fig 9 'repair');
-                # ledger-only: the step-indexed schedule clock ignores it
-                clock.charge("repair", plan.repair_cost_s, advance=False,
-                             label=plan.kind)
                 rep.events.append(StepEvent(step, plan.kind,
                                             {"failed": list(fresh),
                                              "promotions": plan.promotions,
@@ -202,6 +220,19 @@ class FTSession:
                                                  plan.restore_backend}))
                 state, step = strat.handle_plan(workload, state, plan,
                                                 step, rep)
+                # shrink + message recovery (paper Fig 9 'repair');
+                # ledger-only: the step-indexed schedule clock ignores
+                # it.  A workload that repairs its own priced transport
+                # in apply_plan (repro.pool) reports the measured
+                # per-message drain/replay traffic; everyone else gets
+                # the planner's flat estimate
+                repair_s = plan.repair_cost_s
+                rtrans = getattr(workload, "repair_transport", None)
+                if plan.kind == "promote" and rtrans is not None \
+                        and rtrans.cost_model is not None:
+                    repair_s = rtrans.take_comm_time()
+                clock.charge("repair", repair_s, advance=False,
+                             label=plan.kind)
                 if obs is not None:
                     obs.end_span(resumed_step=step)
 
@@ -216,6 +247,16 @@ class FTSession:
             # executed step (the pre-clock vtime trajectory, bitwise);
             # re-executed post-rollback steps are booked as 'rollback'
             clock.charge(component, self.step_time_s)
+            # replica processor-seconds are an explicit ledger component
+            # (the live replicated share of the machine, so the charge
+            # tracks promotions/drops), not a folded efficiency factor —
+            # fig10's overhead row and the Fig 9 split read it directly.
+            # SimRuntime keeps its own accounting; this is FTSession's.
+            n_redundant = len(self.rmap.replicated_ranks())
+            if n_redundant:
+                clock.charge("redundant",
+                             self.step_time_s * n_redundant / self.rmap.n,
+                             advance=False)
             rep.steps = step
             if obs is not None:
                 obs.on_step(step - 1, clock.now - self.step_time_s,

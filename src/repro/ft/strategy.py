@@ -65,6 +65,13 @@ class FTStrategy:
 
     def handle_plan(self, workload, state, plan, step, rep):
         """Execute a RecoveryPlan; returns (state, step)."""
+        # workload plan hook: a workload that owns its own transport
+        # (repro.pool) repairs it here — drop dead endpoints, drain +
+        # replay the promoted replica's network state — before the
+        # strategy-level state handling
+        hook = getattr(workload, "apply_plan", None)
+        if hook is not None:
+            state = hook(state, plan, step, rep)
         if plan.kind == "promote":
             return self._on_promote(workload, state, plan, step, rep)
         if plan.kind == "restart_elastic":
@@ -105,6 +112,12 @@ class _ReplicaMixin:
 
     def on_start(self, workload, state, rep) -> None:
         super().on_start(workload, state, rep)
+        # a self-replicating workload (repro.pool) already executes its
+        # replica endpoints inside its own step — the whole-state shadow
+        # copy would double the redundancy and diverge on promote
+        if getattr(workload, "self_replicating", False):
+            self.replica_state = None
+            return
         self.replica_state = copy_tree(state) if self._simulating() else None
 
     def step(self, workload, state, t):
@@ -125,7 +138,8 @@ class _ReplicaMixin:
 
     def _on_restart(self, workload, state, step, rep):
         state, step = super()._on_restart(workload, state, step, rep)
-        if self._simulating():
+        if self._simulating() and \
+                not getattr(workload, "self_replicating", False):
             self.replica_state = copy_tree(state)
         return state, step
 

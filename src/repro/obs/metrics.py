@@ -124,6 +124,11 @@ def time_distribution(breakdown: Dict[str, float],
     ``m / (n + m)`` — that fraction of the ``useful`` processor-seconds
     is redundant re-execution and is rebooked under ``redundant``.
     Full replication (m == n) gives the paper's half/half split.
+
+    A ledger that already carries an explicit ``redundant`` charge
+    (FTSession books replica processor-seconds as their own component)
+    is passed through unchanged — rebooking on top of it would count the
+    replica share twice.
     """
     if not 0.0 <= replica_fraction < 1.0:
         raise ValueError(f"replica_fraction must be in [0, 1), "
@@ -134,7 +139,7 @@ def time_distribution(breakdown: Dict[str, float],
     comp = {k: 100.0 * v / tot for k, v in breakdown.items()
             if k != "total"} if tot > 0 else \
         {k: 0.0 for k in breakdown if k != "total"}
-    if replica_fraction:
+    if replica_fraction and breakdown.get("redundant", 0.0) <= 0.0:
         useful = comp.get("useful", 0.0)
         comp["redundant"] = comp.get("redundant", 0.0) \
             + useful * replica_fraction

@@ -44,6 +44,7 @@ _BAND_SHORT = {
     "repro.comm.collectives": "coll",
     "repro.store.memstore": "store",
     "repro.topo.algorithms": "topo",
+    "repro.pool.master": "pool",
 }
 
 

@@ -1,0 +1,28 @@
+"""repro.pool: elastic replica-aware master/worker task pool.
+
+A master rank dispatches heterogeneous tasks to worker ranks over the
+replica-aware transport (reserved tag band ``repro.pool.master`` in
+repro.analyze.tags); worker deaths are absorbed forward — replica
+promotion finishes the in-flight task bit-identically, or the rank is
+retired and its task reassigned — never a world rollback.  Runs as a
+first-class Workload under ``FTSession.run`` in all four FT modes.
+See docs/pool_api.md.
+"""
+from repro.pool.master import (TAG_POOL_STATUS, TAG_POOL_TASK,
+                               PoolWorkload)
+from repro.pool.scheduling import (POLICIES, FifoPolicy, LptPolicy,
+                                   SchedulingPolicy, make_policy)
+from repro.pool.task import Task, TaskResult, make_tasks, task_seed
+from repro.pool.workloads import (PROGRAMS, execute_task,
+                                  hyperparameter_sweep_tasks,
+                                  monte_carlo_tasks, register_program,
+                                  run_pool)
+
+__all__ = [
+    "TAG_POOL_STATUS", "TAG_POOL_TASK", "PoolWorkload",
+    "POLICIES", "FifoPolicy", "LptPolicy", "SchedulingPolicy",
+    "make_policy",
+    "Task", "TaskResult", "make_tasks", "task_seed",
+    "PROGRAMS", "execute_task", "hyperparameter_sweep_tasks",
+    "monte_carlo_tasks", "register_program", "run_pool",
+]

@@ -1,0 +1,5 @@
+"""``python -m repro.pool`` — elastic task-pool demo CLI."""
+from repro.pool.demo import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

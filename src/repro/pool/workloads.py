@@ -1,0 +1,142 @@
+"""Task programs + canned pool workloads (docs/pool_api.md).
+
+A *program* is a pure function ``fn(payload, rng) -> value`` registered
+in :data:`PROGRAMS`; ``execute_task`` rebuilds the rng from the task's
+own seed, so the value is a bit-identical function of the task dict no
+matter which worker (or replica, or reassignment target) runs it.
+
+Two canned heterogeneous workloads:
+
+  * :func:`hyperparameter_sweep_tasks` — a sweep over (lr, width) of a
+    deterministic numpy surrogate of the repo's train-step loss curve
+    (closed-form quadratic descent + seeded gradient noise; numpy-only
+    so the bench-scale environment runs it without jax);
+  * :func:`monte_carlo_tasks` — a Monte-Carlo estimation ensemble
+    (sample-count-heterogeneous pi estimators).
+
+:func:`run_pool` is the one-call driver used by the demo CLI, the tests
+and ``benchmarks/fig16_taskpool.py``: build the FTSession with the
+master pinned as the last, unreplicated rank, run, and return the
+report plus the pool.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.pool.task import Task, task_seed
+
+PROGRAMS: Dict[str, Callable] = {}
+
+
+def register_program(name: str):
+    def deco(fn):
+        PROGRAMS[name] = fn
+        return fn
+    return deco
+
+
+def execute_task(td: dict):
+    """Run one task dict deterministically: same dict -> same bits."""
+    fn = PROGRAMS[td["program"]]
+    rng = np.random.default_rng(td["seed"])
+    return fn(dict(td["payload"]), rng)
+
+
+@register_program("train_surrogate")
+def _train_surrogate(payload: dict, rng: np.random.Generator) -> dict:
+    """Surrogate of a (lr, width)-parameterized training run: quadratic
+    loss descended for ``steps`` iterations with seeded gradient noise.
+    Mirrors the shape of the repo's TrainWorkload loss curves without
+    needing jax in the bench environment."""
+    lr = float(payload.get("lr", 1e-2))
+    width = int(payload.get("width", 64))
+    steps = int(payload.get("steps", 50))
+    theta = rng.standard_normal(8) * (1.0 + 1.0 / np.sqrt(width))
+    loss = 0.0
+    for _ in range(steps):
+        grad = theta + 0.05 * rng.standard_normal(8)
+        theta = theta - lr * grad
+        loss = float(np.dot(theta, theta) / 2.0)
+    return {"loss": loss, "lr": lr, "width": width}
+
+
+@register_program("mc_pi")
+def _mc_pi(payload: dict, rng: np.random.Generator) -> dict:
+    """Monte-Carlo pi: ``n_samples`` uniform darts."""
+    n = int(payload.get("n_samples", 10_000))
+    pts = rng.random((n, 2))
+    hits = int(np.count_nonzero((pts * pts).sum(axis=1) <= 1.0))
+    return {"pi": 4.0 * hits / n, "n_samples": n}
+
+
+def hyperparameter_sweep_tasks(*, lrs=(1e-3, 3e-3, 1e-2, 3e-2),
+                               widths=(32, 64, 128),
+                               steps: int = 50,
+                               pool_seed: int = 0) -> List[Task]:
+    """The sweep grid as heterogeneous tasks: cost scales with width."""
+    out = []
+    i = 0
+    for width in widths:
+        for lr in lrs:
+            out.append(Task(
+                task_id=f"hp{i:04d}", program="train_surrogate",
+                payload={"lr": lr, "width": width, "steps": steps},
+                seed=task_seed(pool_seed, i),
+                cost_rounds=1 + width // 64))
+            i += 1
+    return out
+
+
+def monte_carlo_tasks(*, n_tasks: int = 12, base_samples: int = 4_000,
+                      pool_seed: int = 1) -> List[Task]:
+    """A Monte-Carlo ensemble with a heavy-tailed cost mix."""
+    out = []
+    for i in range(n_tasks):
+        scale = 1 + (i % 4)
+        out.append(Task(
+            task_id=f"mc{i:04d}", program="mc_pi",
+            payload={"n_samples": base_samples * scale},
+            seed=task_seed(pool_seed, i),
+            cost_rounds=scale))
+    return out
+
+
+def run_pool(tasks: List[Task], *, mode: str = "replication",
+             n_workers: int = 4, n_steps: int = 60,
+             replication_degree: float = 1.0,
+             mtbf_s: Optional[float] = None,
+             ckpt_interval_s: float = 0.0,
+             seed: int = 0, policy="lpt", speculate: bool = False,
+             elastic: bool = True, topology: Optional[str] = None,
+             step_time_s: float = 1.0, workers_per_node: int = 4,
+             injector=None, obs=None, record_schedule: bool = False):
+    """Drive a PoolWorkload under FTSession; returns (report, pool).
+
+    The session gets ``n_workers + 1`` logical ranks with
+    ``replicable_ranks=n_workers``: the master is the last rank,
+    placement-pinned and unreplicated in every mode."""
+    from repro.configs.base import FTConfig
+    from repro.ft.injector import WeibullFailureInjector
+    from repro.ft.session import FTSession
+    from repro.pool.master import PoolWorkload
+
+    kw = {}
+    if mtbf_s:
+        kw["mtbf_s"] = mtbf_s
+    if ckpt_interval_s:
+        kw["ckpt_interval_s"] = ckpt_interval_s
+    ft = FTConfig(mode=mode, replication_degree=replication_degree,
+                  ckpt_backend="memory", topology=topology, **kw)
+    if injector is None and mtbf_s:
+        injector = WeibullFailureInjector(mtbf_s, seed=seed)
+    pool = PoolWorkload(tasks, policy=policy, speculate=speculate,
+                        elastic=elastic, record_schedule=record_schedule)
+    session = FTSession(ft=ft, injector=injector,
+                        n_logical_workers=n_workers + 1,
+                        workers_per_node=workers_per_node,
+                        replicable_ranks=n_workers,
+                        step_time_s=step_time_s, obs=obs)
+    report = session.run(pool, n_steps)
+    return report, pool

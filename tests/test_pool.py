@@ -1,0 +1,271 @@
+"""repro.pool: the elastic replica-aware master/worker task pool.
+
+The FT-theorem surface for the pool: the result table must be a pure
+function of (tasks, policy) — bitwise-identical across worker, node and
+master-replica kills mid-task, across strategies and topologies.  Under
+replication/combined a worker death is absorbed forward (promotion or
+rank retirement — zero restores, zero rollback); under checkpoint-only
+the same kill takes the restore+replay path.  The recorded round
+schedule verifies clean through repro.analyze.verify_schedule on the
+pool's registered reserved band.
+"""
+import numpy as np
+import pytest
+
+from repro.analyze import verify_schedule
+from repro.analyze.tags import band_owner, reserved_tags
+from repro.ft.injector import StepKillInjector
+from repro.pool import (TAG_POOL_STATUS, TAG_POOL_TASK, PoolWorkload, Task,
+                        execute_task, hyperparameter_sweep_tasks, make_policy,
+                        monte_carlo_tasks, run_pool, task_seed)
+
+W = 4                                     # worker ranks; master = rank W
+STEPS = 40
+
+
+def sweep():
+    return hyperparameter_sweep_tasks()
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    """Failure-free replication run: the reference result table."""
+    rep, pool = run_pool(sweep(), mode="replication", n_workers=W,
+                         n_steps=STEPS)
+    return rep, pool, rep.final_state["ms"]["results"]
+
+
+# ---------------------------------------------------------------- vocabulary
+
+def test_task_seed_deterministic_and_distinct():
+    assert task_seed(7, 3) == task_seed(7, 3)
+    seeds = [task_seed(0, i) for i in range(32)]
+    assert len(set(seeds)) == 32
+
+
+def test_task_roundtrip_and_execute_bitwise():
+    t = sweep()[5]
+    td = t.as_dict()
+    assert Task.from_dict(td) == t
+    a, b = execute_task(td), execute_task(dict(td))
+    assert a == b                          # same dict -> same bits
+
+
+def test_policies_deterministic():
+    tasks = monte_carlo_tasks()
+    fifo = make_policy("fifo").order(tasks)
+    assert fifo == list(tasks)
+    lpt = make_policy("lpt").order(tasks)
+    costs = [t.cost_rounds for t in lpt]
+    assert costs == sorted(costs, reverse=True)
+    assert make_policy("lpt").order(tasks) == lpt     # stable tie-breaks
+    with pytest.raises(ValueError):
+        make_policy("sjf")
+
+
+def test_pool_band_registered():
+    assert band_owner(TAG_POOL_TASK) == "repro.pool.master"
+    assert band_owner(TAG_POOL_STATUS) == "repro.pool.master"
+    tags = reserved_tags()
+    assert tags[TAG_POOL_TASK].endswith("TAG_POOL_TASK")
+    assert tags[TAG_POOL_STATUS].endswith("TAG_POOL_STATUS")
+
+
+# ---------------------------------------------------- failure-free behavior
+
+def test_failure_free_completes_all(baseline):
+    rep, pool, results = baseline
+    stats = pool.pool_stats(rep.final_state)
+    assert stats["completed"] == len(sweep())
+    assert stats["reassigned"] == 0 and stats["duplicates"] == 0
+    assert rep.restarts == 0 and rep.promotions == 0
+    assert sorted(results) == sorted(t.task_id for t in sweep())
+
+
+def test_master_rank_unreplicated(baseline):
+    rep, pool, _ = baseline
+    # replicas cover exactly the worker ranks; the master is pinned last
+    assert pool.master_rank == W
+    assert pool.session.rmap.rep[W] is None
+    assert len(pool.session.rmap.replicated_ranks()) == W
+
+
+def test_redundant_is_explicit_ledger_component(baseline):
+    rep, _, _ = baseline
+    # full replication of 4-of-5 ranks for 40 steps at 1 s/step
+    assert rep.time.redundant == pytest.approx(STEPS * W / (W + 1))
+    assert rep.time.useful == pytest.approx(STEPS)
+    # the Fig 9 accounting must NOT rebook useful on top of it
+    dist = rep.obs_metrics["time_distribution"] if rep.obs_metrics else None
+    assert dist is None                    # baseline runs without obs
+
+
+# ------------------------------------------------- forward recovery (kills)
+
+def test_worker_kill_mid_task_promotes_bitwise(baseline):
+    _, _, ref = baseline
+    rep, pool = run_pool(sweep(), mode="replication", n_workers=W,
+                         n_steps=STEPS, injector=StepKillInjector({3: [1]}))
+    stats = pool.pool_stats(rep.final_state)
+    assert rep.promotions == 1
+    assert rep.restarts == 0 and rep.rolled_back_steps == 0
+    assert rep.restore_s == 0.0
+    assert stats["replica_covered"] == 1   # the task was in flight
+    assert rep.final_state["ms"]["results"] == ref
+
+
+def test_node_kill_pair_death_restarts_bitwise(baseline):
+    _, _, ref = baseline
+    # cmp of rank 2 is wid 2; its replica is wid (W+1)+2 = 7
+    rep, pool = run_pool(sweep(), mode="combined", n_workers=W,
+                         n_steps=STEPS, ckpt_interval_s=5.0,
+                         injector=StepKillInjector({6: [2, 7]}))
+    assert rep.restarts == 1
+    assert rep.final_state["ms"]["results"] == ref
+
+
+def test_unreplicated_worker_kill_retires_rank_bitwise(baseline):
+    _, _, ref = baseline
+    # degree 0.5 replicates ranks 0..1; rank 3's cmp (wid 3) is bare
+    rep, pool = run_pool(sweep(), mode="replication", n_workers=W,
+                         n_steps=STEPS, replication_degree=0.5,
+                         injector=StepKillInjector({3: [3]}))
+    stats = pool.pool_stats(rep.final_state)
+    assert rep.restarts == 0 and rep.rolled_back_steps == 0
+    assert stats["retired_ranks"] == [3]
+    assert stats["reassigned"] == 1
+    assert stats["completed"] == len(sweep())
+    assert rep.final_state["ms"]["results"] == ref
+    ev = [e for e in rep.events if e.kind == "retire_rank"]
+    assert len(ev) == 1 and ev[0].detail["rank"] == 3
+
+
+def test_checkpoint_mode_same_kill_restores_and_replays(baseline):
+    _, _, ref = baseline
+    rep, pool = run_pool(sweep(), mode="checkpoint", n_workers=W,
+                         n_steps=STEPS, ckpt_interval_s=5.0,
+                         injector=StepKillInjector({7: [1]}))
+    assert rep.restarts == 1               # no replica: restore + replay
+    assert rep.rolled_back_steps > 0
+    assert rep.final_state["ms"]["results"] == ref
+
+
+def test_master_kill_restores_bitwise(baseline):
+    _, _, ref = baseline
+    rep, pool = run_pool(sweep(), mode="combined", n_workers=W,
+                         n_steps=STEPS, ckpt_interval_s=5.0,
+                         injector=StepKillInjector({9: [W]}))
+    assert rep.restarts == 1
+    assert rep.final_state["ms"]["results"] == ref
+
+
+@pytest.mark.parametrize("mode,kills", [
+    ("replication", {2: [0], 5: [6], 9: [3]}),
+    ("combined", {2: [1], 6: [2, 7], 11: [0]}),
+    ("checkpoint", {4: [2], 13: [W]}),
+])
+@pytest.mark.parametrize("topology", [None, "fattree"])
+def test_bitwise_across_strategies_and_topologies(baseline, mode, kills,
+                                                  topology):
+    _, _, ref = baseline
+    rep, pool = run_pool(sweep(), mode=mode, n_workers=W, n_steps=STEPS,
+                         ckpt_interval_s=5.0, topology=topology,
+                         injector=StepKillInjector(kills))
+    assert rep.final_state["ms"]["results"] == ref
+    if mode != "checkpoint":
+        assert rep.rolled_back_steps == 0 or rep.restarts > 0
+
+
+# --------------------------------------------------------- priced transport
+
+def test_pool_traffic_priced_through_topology():
+    rep, pool = run_pool(sweep(), mode="replication", n_workers=W,
+                         n_steps=STEPS, topology="fattree")
+    assert pool.transport.cost_model is not None
+    assert rep.time.comm > 0.0
+
+def test_promotion_repair_measured_not_flat():
+    # kill at step 1: step-0 directives are still in flight, so the
+    # promoted replica's repair replays >= 1 priced message — the session
+    # books the measured drain/replay traffic, not the planner's 5 ms
+    rep, _ = run_pool(sweep(), mode="replication", n_workers=W,
+                      n_steps=STEPS, topology="fattree",
+                      injector=StepKillInjector({1: [0]}))
+    assert rep.promotions == 1
+    assert 0.0 < rep.time.repair < 0.005
+
+
+def test_priced_replay_through_recovery_manager():
+    from repro.comm.recovery import RecoveryManager
+    rep, pool = run_pool(sweep(), mode="replication", n_workers=W,
+                         n_steps=4, topology="fattree")
+    man = RecoveryManager(pool.transport, price_replay=True)
+    assert man.price_replay and man.replays == 0
+
+
+# ------------------------------------------------------- schedule property
+
+def test_recorded_schedule_verifies_clean():
+    rep, pool = run_pool(sweep(), mode="replication", n_workers=W,
+                         n_steps=20, injector=StepKillInjector({1: [0]}),
+                         record_schedule=True)
+    sched = pool.recorded_schedule()
+    findings = verify_schedule(sched, n=W + 1, label="pool",
+                               infra_owners=("repro.pool.master",))
+    assert findings == []
+    # negative control: without the exemption the reserved band is caught
+    flagged = verify_schedule(sched, n=W + 1, label="pool")
+    assert any(f.rule == "tag-reserved" for f in flagged)
+
+
+def test_recorded_schedule_verifies_clean_after_restore():
+    rep, pool = run_pool(sweep(), mode="checkpoint", n_workers=W,
+                         n_steps=20, ckpt_interval_s=5.0,
+                         injector=StepKillInjector({7: [1]}),
+                         record_schedule=True)
+    assert rep.restarts == 1
+    findings = verify_schedule(pool.recorded_schedule(), n=W + 1,
+                               label="pool-ckpt",
+                               infra_owners=("repro.pool.master",))
+    assert findings == []
+
+
+# ------------------------------------------------------------- work stealing
+
+def test_speculation_is_idempotent():
+    mc = monte_carlo_tasks()
+    plain, p0 = run_pool(mc, mode="none", n_workers=3, n_steps=STEPS,
+                         policy="fifo")
+    spec, p1 = run_pool(mc, mode="none", n_workers=3, n_steps=STEPS,
+                        policy="fifo", speculate=True)
+    s = p1.pool_stats(spec.final_state)
+    assert s["speculated"] >= 1
+    assert s["duplicates"] >= 1            # late copies counted, not applied
+    assert s["completed"] == len(mc)
+    assert spec.final_state["ms"]["results"] == \
+        plain.final_state["ms"]["results"]
+
+
+# ------------------------------------------------------------- observability
+
+def test_pool_obs_metrics_and_spans():
+    rep, pool = run_pool(sweep(), mode="replication", n_workers=W,
+                         n_steps=STEPS, obs=True,
+                         injector=StepKillInjector({3: [1]}))
+    m = rep.obs_metrics
+    c = m["counters"]
+    assert c["pool.tasks.dispatched"] == len(sweep())
+    assert c["pool.tasks.completed_total"] == len(sweep())
+    assert c["pool.tasks.replica_covered"] == 1
+    assert m["gauges"]["pool.tasks.completed"] == len(sweep())
+    assert 0.0 < m["gauges"]["pool.occupancy"] <= 1.0
+    assert m["histograms"]["pool.task_latency_rounds"]["count"] == \
+        len(sweep())
+    # task-lifecycle spans + pool traffic on the "pool" band short name
+    spans = [s for s in rep.obs.tracer.spans if s.cat == "pool.task"]
+    assert len(spans) == len(sweep())
+    assert c["comm.msgs.pool.cmp"] > 0
+    # explicit redundant charge flows into the Fig 9 distribution once
+    dist = m["time_distribution"]
+    assert dist["redundant"] == pytest.approx(
+        100.0 * rep.time.redundant / rep.time.total)
