@@ -3,7 +3,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test lint analyze mypy check bench bench-smoke bench-store \
-    bench-topo bench-clock bench-scale bench-obs bench-pool
+    bench-topo bench-clock bench-scale bench-obs bench-pool \
+    bench-collective profile
 
 test:
 	$(PY) -m pytest -x -q
@@ -66,3 +67,14 @@ bench-pool:
 # arcs are present, and band bytes reconcile with the sender logs
 bench-obs:
 	$(PY) -m benchmarks.obs_smoke
+
+# switchboard-collective throughput ladder (docs/perf.md, SoA tables);
+# writes BENCH_collective.json. CI runs `--smoke --no-write` (N<=4096
+# steps/s floor)
+bench-collective:
+	$(PY) -m benchmarks.bench_collective
+
+# cProfile over the bench-scale smoke point, top-25 cumulative — the
+# reproducible backing for hot-path claims in docs/perf.md
+profile:
+	$(PY) -m benchmarks.profile_hotpath

@@ -1,0 +1,283 @@
+"""bench-collective: switchboard throughput on an allreduce/barrier ladder.
+
+The workload is ``CollectiveStorm``, deliberately the opposite shape of
+bench_scale's ``SparseHalo``: almost no point-to-point traffic, three
+switchboard collectives per rank per step —
+
+  * a vector float64 ``allreduce("sum")`` — the stacked SoA fast path
+    (one ``np.add.reduce`` over the (n, vec) contribution buffer);
+  * a scalar ``allreduce("max")`` — the object-path switchboard (scalars
+    stay on the sequential fold so result types are bitwise-stable);
+  * a ``barrier`` — arrival masks only, no payload.
+
+This is the hot path the SoA message tables vectorize (docs/perf.md,
+"SoA collective tables"): per (N, mode) point the pre-SoA engine paid
+O(N) per-worker completeness scans + O(N) memo-key hashing, i.e. O(N^2)
+per collective instance.  The committed ``pre_engine`` section of
+``BENCH_collective.json`` was measured on that engine, in-PR, before the
+refactor landed; ``speedup_vs_pre`` is the acceptance ratio (>= 3x for
+``replication``/``combined`` at N=8192).
+
+    make bench-collective            # full ladder, rewrites results
+    python -m benchmarks.bench_collective --smoke
+                                     # N<=4096; asserts the committed
+                                     # smoke floor (>30% regression: CI)
+    python -m benchmarks.bench_collective --record-pre
+                                     # capture pre_engine (pre-refactor)
+
+Every mode at a given N runs the same step count (``steps_for``), so
+steps/s is comparable across the none/replication/combined lines.
+
+``run()`` (the benchmarks.run / pin_digests entry) is wall-time-free:
+small in-process worlds, one with a mid-collective kill, whose check
+values are pure virtual-time arithmetic — the pinned digest proves the
+SoA engine is bitwise-identical to the dict engine under promotion.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.bench_scale import SMOKE_FLOOR_FRACTION, fork_measure
+
+RESULT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_collective.json")
+
+LADDER = (8192,)
+SMOKE_LADDER = (1024, 4096)
+MODES = ("none", "replication", "combined")
+
+
+class CollectiveStorm:
+    """Three switchboard collectives per rank per step; tiny state."""
+
+    def __init__(self, n_ranks: int, vec_floats: int = 64, seed: int = 0):
+        self.n_ranks = n_ranks
+        self.vec_floats = vec_floats
+        self.seed = seed
+
+    def init_state(self, rank: int) -> dict:
+        return {"acc": np.zeros(self.vec_floats, dtype=np.float64),
+                "hi": 0.0}
+
+    def _vec(self, rank: int, t: int) -> np.ndarray:
+        v = np.full(self.vec_floats,
+                    1e-6 * ((rank * 31 + t * 7) % 997), dtype=np.float64)
+        v[0] = 1e-3 * ((rank + t) % 89)
+        return v
+
+    def step(self, rank, state, step_idx):
+        s = yield ("allreduce", self._vec(rank, step_idx), "sum")
+        hi = yield ("allreduce",
+                    float((rank * 13 + step_idx * 29) % 1009), "max")
+        yield ("barrier",)
+        return {"acc": state["acc"] + s * 1e-3, "hi": state["hi"] + hi}
+
+    def check(self, states) -> float:
+        return float(sum(s["acc"][0] + 1e-6 * s["hi"]
+                         for s in states.values()))
+
+
+def _run_point(n_ranks: int, mode: str, steps: int, vec_floats: int,
+               obs: bool, out_q) -> None:
+    """One (N, mode) measurement; runs in a forked child."""
+    import resource
+
+    from repro.configs.base import FTConfig
+    from repro.simrt import CostModel, SimRuntime
+
+    app = CollectiveStorm(n_ranks, vec_floats=vec_floats)
+    if mode == "combined":
+        ft = FTConfig(mode="combined", replication_degree=1.0,
+                      ckpt_interval_s=float(max(2, steps // 2)),
+                      ckpt_backend="memory", store_partners=1,
+                      store_bands=2)
+    elif mode == "replication":
+        ft = FTConfig(mode="replication", replication_degree=1.0)
+    else:
+        ft = FTConfig(mode="none")
+    costs = CostModel(step_time_s=1.0, ckpt_cost_s=0.01,
+                      restore_cost_s=0.01)
+    rt = SimRuntime(app, ft, costs=costs, workers_per_node=4,
+                    obs=True if obs else None)
+    # repro: allow[wallclock] -- genuine wall measurement
+    t0 = time.perf_counter()
+    res = rt.run(steps)
+    # repro: allow[wallclock] -- genuine wall measurement
+    wall = time.perf_counter() - t0
+    rss_mib = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    out_q.put({
+        "n_ranks": n_ranks, "mode": mode, "steps": steps,
+        "wall_s": round(wall, 3),
+        "steps_per_s": round(steps / wall, 4) if wall > 0 else 0.0,
+        "rank_steps_per_s": round(steps * n_ranks / wall, 1)
+        if wall > 0 else 0.0,
+        "peak_rss_mib": round(rss_mib, 1),
+        "check_value": res.check_value,
+        "obs": obs,
+    })
+
+
+def measure(n_ranks: int, mode: str, steps: int,
+            vec_floats: int = 64, obs: bool = False) -> dict:
+    return fork_measure(_run_point, (n_ranks, mode, steps, vec_floats,
+                                     obs))
+
+
+def steps_for(n_ranks: int) -> int:
+    """Same step count for every mode at a given N (steps/s stays
+    comparable across the three lines), scaled down the ladder."""
+    return max(2, (1 << 11) // max(n_ranks // 8, 1))
+
+
+def run_ladder(ladder, modes, *, verbose: bool = True, steps: int = None):
+    points = []
+    for n in ladder:
+        for mode in modes:
+            pt = measure(n, mode, steps or steps_for(n))
+            points.append(pt)
+            if verbose:
+                print(f"  N={n:>7} {mode:<12} {pt['steps_per_s']:>9.3f} "
+                      f"steps/s  {pt['rank_steps_per_s']:>12.0f} "
+                      f"rank-steps/s  rss {pt['peak_rss_mib']:.0f} MiB",
+                      file=sys.stderr)
+    return points
+
+
+def _load() -> dict:
+    if os.path.exists(RESULT_PATH):
+        with open(RESULT_PATH) as f:
+            return json.load(f)
+    return {}
+
+
+def _store(data: dict) -> None:
+    with open(RESULT_PATH, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def _key(pt: dict) -> str:
+    return f"{pt['n_ranks']}/{pt['mode']}"
+
+
+def record_pre(args) -> int:
+    """Measure the CURRENT engine as the pre-SoA reference (run once,
+    in-PR, before the refactor; kept committed for the >=3x ratio)."""
+    pts = run_ladder([args.n or 8192], MODES, steps=args.steps)
+    data = _load()
+    data["pre_engine"] = {_key(p): p for p in pts}
+    _store(data)
+    print(f"pre-SoA engine baseline recorded to {RESULT_PATH}")
+    return 0
+
+
+def smoke(args) -> int:
+    pts = run_ladder(SMOKE_LADDER, MODES)
+    data = _load()
+    floors = data.get("smoke", {})
+    data["smoke"] = {_key(p): p for p in pts}
+    bad = []
+    for p in pts:
+        base = floors.get(_key(p))
+        if base is None:
+            continue
+        floor = SMOKE_FLOOR_FRACTION * base["steps_per_s"]
+        if p["steps_per_s"] < floor:
+            bad.append(f"{_key(p)}: {p['steps_per_s']:.3f} steps/s < "
+                       f"floor {floor:.3f} "
+                       f"(baseline {base['steps_per_s']:.3f})")
+    if not args.no_write:
+        _store(data)
+    for line in bad:
+        print(f"REGRESSION {line}")
+    print(f"bench-collective --smoke: {len(pts)} points, "
+          f"{len(bad)} regression(s)")
+    return 1 if bad else 0
+
+
+def full(args) -> int:
+    ladder = [args.n] if args.n else list(LADDER)
+    pts = run_ladder(ladder, MODES)
+    data = _load()
+    results = data.setdefault("results", {})
+    results.update({_key(p): p for p in pts})
+    pre = data.get("pre_engine", {})
+    for k, p in sorted(results.items()):
+        if k in pre and pre[k]["steps_per_s"] > 0:
+            ratio = p["steps_per_s"] / pre[k]["steps_per_s"]
+            data.setdefault("speedup_vs_pre", {})[k] = round(ratio, 2)
+    _store(data)
+    print(f"bench-collective: {len(pts)} points -> {RESULT_PATH}")
+    for k, r in sorted(data.get("speedup_vs_pre", {}).items()):
+        print(f"  speedup vs pre-SoA engine {k}: {r}x")
+    return 0
+
+
+def run():
+    """benchmarks.run / pin_digests entry: small deterministic worlds
+    (one with a mid-collective kill, so the promotion-fallback combine is
+    under the digest) as (name, us, derived) rows; wall time never enters
+    ``derived``."""
+    from repro.configs.base import FTConfig
+    from repro.core.failure_sim import FailureEvent
+    from repro.simrt import CostModel, SimRuntime
+
+    cases = (
+        (8, "none", ()),
+        (8, "replication", (FailureEvent(1.5, (3,)),)),
+        (6, "combined", (FailureEvent(2.5, (2,)),)),
+    )
+    rows = []
+    for n, mode, events in cases:
+        t0 = time.perf_counter()
+        app = CollectiveStorm(n, vec_floats=8)
+        if mode == "combined":
+            ft = FTConfig(mode="combined", replication_degree=1.0,
+                          ckpt_interval_s=2.0, ckpt_backend="memory",
+                          store_partners=1, store_bands=2)
+        elif mode == "replication":
+            ft = FTConfig(mode="replication", replication_degree=1.0)
+        else:
+            ft = FTConfig(mode="none")
+        rt = SimRuntime(app, ft,
+                        costs=CostModel(step_time_s=1.0, ckpt_cost_s=0.1,
+                                        restore_cost_s=0.1),
+                        failure_events=list(events), workers_per_node=2)
+        res = rt.run(4)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"bench_collective/{n}_{mode}"
+                     f"{'_kill' if events else ''}", us,
+                     f"check={res.check_value:.9f} "
+                     f"steps={res.steps_done}"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="N<=4096 ladder; asserts the committed floor")
+    ap.add_argument("--record-pre", action="store_true",
+                    help="record the current engine as the pre-SoA "
+                         "reference (run before the refactor)")
+    ap.add_argument("--n", type=int, default=None,
+                    help="run a single ladder size instead of the default")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override the per-point step count")
+    ap.add_argument("--no-write", action="store_true",
+                    help="don't rewrite BENCH_collective.json (CI check)")
+    args = ap.parse_args(argv)
+    if args.record_pre:
+        return record_pre(args)
+    if args.smoke:
+        return smoke(args)
+    return full(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

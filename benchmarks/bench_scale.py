@@ -103,7 +103,7 @@ class SparseHalo:
 
 
 def _run_point(n_ranks: int, mode: str, steps: int, halo_floats: int,
-               out_q, obs: bool = False) -> None:
+               obs: bool, out_q) -> None:
     """One (N, mode) measurement; runs in a forked child."""
     from repro.configs.base import FTConfig
     from repro.simrt import CostModel, SimRuntime
@@ -142,12 +142,17 @@ def _run_point(n_ranks: int, mode: str, steps: int, halo_floats: int,
     })
 
 
-def measure(n_ranks: int, mode: str, steps: int,
-            halo_floats: int = 64, obs: bool = False) -> dict:
+def fork_measure(target, args: tuple) -> dict:
+    """Run ``target(*args, out_q)`` in a forked child and return its one
+    result dict.  Shared by the ladder benches (bench_collective reuses
+    it): the fork isolates peak-RSS accounting per point, and the
+    parent-side runtime import below pins every child to one loaded
+    module set."""
+    import repro.configs.base  # noqa: F401
+    import repro.simrt  # noqa: F401
     ctx = mp.get_context("fork")
     q = ctx.Queue()
-    p = ctx.Process(target=_run_point,
-                    args=(n_ranks, mode, steps, halo_floats, q, obs))
+    p = ctx.Process(target=target, args=args + (q,))
     p.start()
     while True:
         try:
@@ -158,10 +163,16 @@ def measure(n_ranks: int, mode: str, steps: int,
             # bench, not hang the parent on the queue forever
             if not p.is_alive():
                 raise RuntimeError(
-                    f"bench child N={n_ranks}/{mode} died "
+                    f"bench child {target.__name__}{args[:2]} died "
                     f"(exit code {p.exitcode}) before reporting")
     p.join()
     return out
+
+
+def measure(n_ranks: int, mode: str, steps: int,
+            halo_floats: int = 64, obs: bool = False) -> dict:
+    return fork_measure(_run_point, (n_ranks, mode, steps, halo_floats,
+                                     obs))
 
 
 def steps_for(n_ranks: int) -> int:
@@ -202,9 +213,13 @@ def _key(pt: dict) -> str:
 
 
 def record_pre_baseline(args) -> int:
-    """Measure the CURRENT transport as the pre-refactor reference (run
-    once, in-PR, before the perf work; kept committed for the ratio)."""
-    pts = run_ladder([args.n or 8192], MODES, steps=args.steps or 2)
+    """Measure the CURRENT engine as the pre-refactor reference (run
+    once, in-PR, before the perf work; kept committed for the ratio).
+    Uses the same ``steps_for`` schedule as the full ladder so baseline
+    and results points are steps/s-comparable across modes AND runs (the
+    PR 7 baseline was recorded at a fixed 2 steps, which made the 8192+
+    points incomparable with the 64-step results)."""
+    pts = run_ladder([args.n or 8192], MODES, steps=args.steps)
     data = _load()
     data["pre_refactor"] = {_key(p): p for p in pts}
     _store(data)

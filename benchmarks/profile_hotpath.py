@@ -1,0 +1,72 @@
+"""make profile: cProfile over a bench smoke point, top-25 cumulative.
+
+Hot-path claims in docs/perf.md must be reproducible: this runs one
+in-process (N, mode) point of the bench-scale SparseHalo app — or the
+bench-collective CollectiveStorm with ``--collective`` — under cProfile
+and dumps the top 25 functions by cumulative time.
+
+    make profile
+    python -m benchmarks.profile_hotpath --collective --n 2048 --steps 8
+"""
+from __future__ import annotations
+
+import argparse
+import cProfile
+import pstats
+import sys
+
+TOP = 25
+
+
+def _build(args):
+    from repro.configs.base import FTConfig
+    from repro.simrt import CostModel, SimRuntime
+
+    if args.collective:
+        from benchmarks.bench_collective import CollectiveStorm
+        app = CollectiveStorm(args.n)
+    else:
+        from benchmarks.bench_scale import SparseHalo
+        app = SparseHalo(args.n)
+    if args.mode == "combined":
+        ft = FTConfig(mode="combined", replication_degree=1.0,
+                      ckpt_interval_s=float(max(2, args.steps // 2)),
+                      ckpt_backend="memory", store_partners=1,
+                      store_bands=2)
+    elif args.mode == "replication":
+        ft = FTConfig(mode="replication", replication_degree=1.0)
+    else:
+        ft = FTConfig(mode="none")
+    costs = CostModel(step_time_s=1.0, ckpt_cost_s=0.01,
+                      restore_cost_s=0.01)
+    return SimRuntime(app, ft, costs=costs, workers_per_node=4)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--mode", default="replication",
+                    choices=("none", "replication", "combined"))
+    ap.add_argument("--collective", action="store_true",
+                    help="profile the allreduce/barrier-heavy "
+                         "CollectiveStorm instead of SparseHalo")
+    ap.add_argument("--sort", default="cumulative",
+                    choices=("cumulative", "tottime"))
+    args = ap.parse_args(argv)
+    rt = _build(args)
+    app_name = "CollectiveStorm" if args.collective else "SparseHalo"
+    print(f"profiling {app_name} N={args.n} mode={args.mode} "
+          f"steps={args.steps} (top {TOP} by {args.sort})",
+          file=sys.stderr)
+    prof = cProfile.Profile()
+    prof.enable()
+    rt.run(args.steps)
+    prof.disable()
+    pstats.Stats(prof, stream=sys.stdout) \
+        .sort_stats(args.sort).print_stats(TOP)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,7 +23,7 @@ def main(argv=None) -> None:
     names = ["table1_intervals", "fig7_8_hpcg", "fig9_time_distribution",
              "fig10_overhead", "fig11_12_apps", "fig13_log_replay",
              "fig14_memstore", "fig15_topology", "fig16_taskpool",
-             "clock_breakdown", "roofline_report"]
+             "clock_breakdown", "roofline_report", "bench_collective"]
     if args.only:
         unknown = [n for n in args.only if n not in names]
         if unknown:

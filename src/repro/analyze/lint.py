@@ -29,6 +29,13 @@ those invariants as five rules over ``src/repro``:
                       payloads are copy-on-write (frozen at send,
                       repro.comm.payload), so a deepcopy per message is
                       an O(payload) regression waiting to happen
+  per-rank-loop       ``for … in range(<x>.n)`` (self.n / engine.n)
+                      inside ``comm/collectives.py``: the switchboard
+                      hot paths are vectorized over SoA message tables
+                      (docs/perf.md), so a per-rank Python loop there is
+                      an O(N) regression; genuine per-destination dense
+                      message loops annotate
+                      ``# repro: allow[per-rank-loop]``
   no-print            bare ``print(...)`` in library modules: runtime
                       state belongs in the repro.obs surfaces (metrics /
                       traces) or in a returned result, not on stdout.
@@ -62,12 +69,19 @@ RULES: Dict[str, str] = {
     "tag-range": "reserved message-tag band violation or collision",
     "deepcopy": "copy.deepcopy on a comm hot path (payloads are "
                 "copy-on-write)",
+    "per-rank-loop": "per-rank Python loop on a vectorized collective "
+                     "hot path",
     "no-print": "bare print() in a library module (not a CLI entry "
                 "point)",
 }
 
 # the comm hot paths the deepcopy rule polices (path fragments)
 _DEEPCOPY_PATHS = ("repro/comm/",)
+
+# the files the per-rank-loop rule polices: the collective engine is
+# vectorized over SoA tables, so range(self.n)/range(engine.n) loops
+# there are regressions unless explicitly allowed
+_PER_RANK_PATHS = ("repro/comm/collectives.py",)
 
 # explicit no-print exemptions: CLI-facing library modules that are
 # neither a __main__.py nor a top-level main() module (path suffixes,
@@ -156,6 +170,8 @@ class _Linter(ast.NodeVisitor):
         norm = path.replace(os.sep, "/")
         self.is_cli = os.path.basename(path) == "__main__.py" or \
             any(norm.endswith(sfx) for sfx in _CLI_MODULE_SUFFIXES)
+        self.check_per_rank = any(frag in norm
+                                  for frag in _PER_RANK_PATHS)
 
     # -- helpers -------------------------------------------------------------
 
@@ -402,6 +418,7 @@ class _Linter(ast.NodeVisitor):
     # -- iteration -----------------------------------------------------------
 
     def _check_iter(self, node: ast.AST, iter_node: ast.AST) -> None:
+        self._check_per_rank(node, iter_node)
         if self._order_safe_depth:
             return
         if self._is_set_expr(iter_node):
@@ -410,6 +427,26 @@ class _Linter(ast.NodeVisitor):
                        "nondeterministic and feeds downstream "
                        "combine/placement/reduction order",
                        "iterate sorted(...) instead")
+
+    def _check_per_rank(self, node: ast.AST, iter_node: ast.AST) -> None:
+        """``range(self.n)`` / ``range(x, engine.n)`` loops in the
+        collective engine: the switchboard is vectorized over SoA tables,
+        so a per-rank Python loop there is an O(N) hot-path regression."""
+        if not self.check_per_rank:
+            return
+        if not (isinstance(iter_node, ast.Call)
+                and isinstance(iter_node.func, ast.Name)
+                and iter_node.func.id == "range"):
+            return
+        if any(isinstance(a, ast.Attribute) and a.attr == "n"
+               for a in iter_node.args):
+            self._emit(node, "per-rank-loop",
+                       "per-rank Python loop over range(*.n) on a "
+                       "collective hot path",
+                       "vectorize over the SoA message tables "
+                       "(docs/perf.md), or annotate a genuine "
+                       "per-destination message loop with  "
+                       "# repro: allow[per-rank-loop]")
 
     def visit_For(self, node: ast.For) -> None:
         self._check_iter(node, node.iter)

@@ -8,9 +8,15 @@ Two implementation families, one registry:
     combines replica contributions plus the no-replica computational ones
     (delivered over the intercomm in the real library).  A promoted
     worker's old-role contribution counts for its new role (same value by
-    construction).  Combining is memoized per (instance, role-view) and
-    vectorized for array payloads, so an N-worker world performs each
-    reduction once, not once per worker.
+    construction).  Intake is structure-of-arrays (``_SwitchTable``,
+    docs/perf.md "SoA collective tables"): per-role numpy arrival
+    bitmasks, contributions stacked into one ``(n, …)`` buffer, an O(1)
+    union-completeness counter.  Combining is one vectorized ufunc
+    reduction (``combine_stacked``; rank-ascending, bitwise-identical to
+    the sequential fold), memoized per (instance, role-view), and
+    resolution is batched: completed instances land on a completion list
+    the scheduler drains to wake exactly the parked waiters
+    (``CollectiveEngine.take_completions``).
 
   * transport collectives (``bcast``, ``gather``, ``reduce_scatter``,
     ``alltoall``) decompose into explicit point-to-point sends over the
@@ -66,15 +72,29 @@ TAG_SCAN = -16
 TAG_NEIGHBOR_ALLGATHER = -17
 TAG_NEIGHBOR_ALLTOALL = -18
 
-_REDOPS = {"sum": np.add, "max": np.maximum, "min": np.minimum}
+_REDOPS = {"sum": np.add, "max": np.maximum, "min": np.minimum,
+           "prod": np.multiply}
+
+
+def combine_stacked(redop: str, stacked: np.ndarray) -> Any:
+    """THE combine kernel: one vectorized ufunc reduction over the
+    leading (rank) axis of a stacked ``(n, …)`` contribution buffer.
+    numpy's outer-axis reduction is a row-by-row accumulation, so for
+    rows of ndim >= 1 the result is bitwise-identical to the sequential
+    rank-ascending fold.  Both the engine's SoA tables and the
+    ``ReferenceCollectives`` resolver reduce through here."""
+    ufunc = _REDOPS.get(redop)
+    if ufunc is None:
+        raise ValueError(f"unknown reduction op {redop!r}")
+    return ufunc.reduce(stacked, axis=0)
 
 
 def combine(redop: str, values) -> Any:
     """Reduce ``values`` in index order. Array payloads of a common shape
-    are combined with one vectorized ufunc reduce over the stacked axis
-    (bitwise-identical to the sequential fold for ndim >= 1 — numpy's
-    outer-axis reduction is a row-by-row accumulation); scalars and ragged
-    payloads fall back to the sequential fold."""
+    are stacked and handed to ``combine_stacked``; scalars and ragged
+    payloads fall back to the sequential fold (keeping result types
+    bitwise-stable: a scalar allreduce returns a Python float, not a
+    numpy scalar)."""
     ufunc = _REDOPS.get(redop)
     if ufunc is None:
         raise ValueError(f"unknown reduction op {redop!r}")
@@ -83,7 +103,7 @@ def combine(redop: str, values) -> Any:
             isinstance(v, np.ndarray) and v.ndim >= 1
             and v.shape == values[0].shape and v.dtype == values[0].dtype
             for v in values):
-        return ufunc.reduce(np.stack(values), axis=0)
+        return combine_stacked(redop, np.stack(values))
     out = values[0]
     for v in values[1:]:
         out = ufunc(out, v) if redop != "sum" else out + v
@@ -149,8 +169,85 @@ class CollectiveOp:
         raise NotImplementedError
 
 
+class _SwitchTable:
+    """Structure-of-arrays intake table for ONE switchboard instance.
+
+    Per role: a boolean arrival mask over ranks plus the contributions
+    stacked into one ``(n, …)`` numpy buffer (the role's first
+    exact-dtype ndarray payload sizes the stack; scalars, ragged shapes,
+    ndarray subclasses, and object dtypes demote the role to a plain
+    object list, which resolves through the sequential ``combine``
+    path).  ``have`` counts ranks with a vote from EITHER role, so union
+    completeness — the §5 rule with promotion fallback folded in — is
+    one integer compare instead of a per-rank membership scan."""
+
+    __slots__ = ("n", "masks", "stacks", "objs", "have", "complete")
+
+    def __init__(self, n: int):
+        self.n = n
+        self.masks: Dict[str, np.ndarray] = {}
+        self.stacks: Dict[str, Optional[np.ndarray]] = {}
+        self.objs: Dict[str, Optional[list]] = {}
+        self.have = 0                 # ranks with >= 1 vote (union count)
+        self.complete = False
+
+    def post(self, role: str, rank: int, value, store: bool) -> bool:
+        """Record one contribution; True when this vote completed the
+        union.  ``store=False`` (barrier) keeps only the arrival mask."""
+        mask = self.masks.get(role)
+        if mask is None:
+            mask = self.masks[role] = np.zeros(self.n, dtype=bool)
+            if store:
+                if type(value) is np.ndarray and value.ndim >= 1 \
+                        and value.dtype != object:
+                    self.stacks[role] = np.zeros(
+                        (self.n,) + value.shape, dtype=value.dtype)
+                    self.objs[role] = None
+                else:
+                    self.stacks[role] = None
+                    self.objs[role] = [None] * self.n
+        had = self._covered(rank)
+        mask[rank] = True
+        if store:
+            stack = self.stacks.get(role)
+            if stack is not None and type(value) is np.ndarray \
+                    and value.shape == stack.shape[1:] \
+                    and value.dtype == stack.dtype:
+                stack[rank] = value       # the row write IS the copy
+            else:
+                self._demote(role, stack)
+                self.objs[role][rank] = structural_copy(value)
+        if not had:
+            self.have += 1
+            if self.have == self.n:
+                self.complete = True
+                return True
+        return False
+
+    def _covered(self, rank: int) -> bool:
+        for mask in self.masks.values():      # <= 2 roles
+            if mask[rank]:
+                return True
+        return False
+
+    def _demote(self, role: str, stack) -> None:
+        """Mixed payload shapes/dtypes within one role: fall back to an
+        object list (resolved via the sequential ``combine``)."""
+        if self.objs.get(role) is not None:
+            return
+        objs = [None] * self.n
+        if stack is not None:
+            mask = self.masks[role]
+            n = self.n
+            for r in range(n):               # demotion slow path
+                if mask[r]:
+                    objs[r] = stack[r].copy()
+        self.objs[role] = objs
+        self.stacks[role] = None
+
+
 class _SwitchboardOp(CollectiveOp):
-    """Matches role-tagged contributions in the engine's table (no
+    """Matches role-tagged contributions in the engine's SoA tables (no
     messages): the §5 role-aware completion rule with promotion fallback.
 
     Pricing: the in-memory match stands in for a dense exchange — one
@@ -177,7 +274,7 @@ class _SwitchboardOp(CollectiveOp):
         if t.cost_model is None:
             return                       # unpriced: skip sizing the payload
         nbytes = payload_nbytes(value) if value is not None else 0
-        for dst in range(engine.n):
+        for dst in range(engine.n):  # repro: allow[per-rank-loop] -- priced (small-N) runs only
             if dst != rank:
                 t.charge_phantom(ep, dst, nbytes)
 
@@ -191,28 +288,21 @@ class AllreduceOp(_SwitchboardOp):
     def post(self, engine, ep, role, rank, op, step):
         _, value, redop = op
         key = self._key(engine, ep, op, step)
-        engine.contrib.setdefault(key, {})[(role, rank)] = \
-            structural_copy(value)
+        engine.intake(key, role, rank, value, store=True)
         self._charge_dense(engine, ep, rank, value)
         return ("collective", key, redop)
 
     def resolve(self, engine, ep, role, rank, pend):
         _, key, redop = pend
-        votes = engine.contrib.get(key, {})
-        need = engine.role_view(role)
-        if any(k not in votes for k in need):
-            # promotion fallback: a promoted worker's old rep contribution
-            # counts as cmp (same value by construction)
-            missing = [k for k in need if k not in votes]
-            for mk in missing:
-                alt = ("rep" if mk[0] == "cmp" else "cmp", mk[1])
-                if alt not in votes:
-                    return NOTHING
-                votes[mk] = votes[alt]
-        memo_key = (key, need)
+        table = engine.tables.get(key)
+        if table is None or not table.complete:
+            return NOTHING
+        # memoized per (instance, role view); the view key is O(1) — the
+        # rep view collapses to "cmp" while no rank has a live replica
+        memo_key = (key, engine.view_key(role))
         out = engine.combined.get(memo_key)
         if out is None:
-            out = combine(redop, [votes[k] for k in need])
+            out = engine.combine_table(table, role, redop)
             engine.combined[memo_key] = out
         # each worker gets its own array (matching the pre-memoization
         # contract): an app mutating its result in place must not corrupt
@@ -225,14 +315,14 @@ class BarrierOp(_SwitchboardOp):
 
     def post(self, engine, ep, role, rank, op, step):
         key = self._key(engine, ep, op, step)
-        engine.contrib.setdefault(key, {})[rank] = (role, True)
+        engine.intake(key, role, rank, None, store=False)
         self._charge_dense(engine, ep, rank)      # zero-byte sync round
         return ("collective", key, None)
 
     def resolve(self, engine, ep, role, rank, pend):
         _, key, _ = pend
-        votes = engine.contrib.get(key, {})
-        if set(votes) != set(range(engine.n)):
+        table = engine.tables.get(key)
+        if table is None or not table.complete:
             return NOTHING
         return None
 
@@ -255,7 +345,7 @@ class BcastOp(_TransportOp):
     def post(self, engine, ep, role, rank, op, step):
         _, value, root = op
         if rank == root:
-            for dst in range(engine.n):
+            for dst in range(engine.n):  # repro: allow[per-rank-loop] -- one real send per peer
                 if dst != root:
                     self._send(engine, ep, role, dst, value, step)
             return ("bcast_done", structural_copy(value))
@@ -284,13 +374,14 @@ class GatherOp(_TransportOp):
         if pend[0] == "gather_done":
             return None
         _, _root, got = pend
-        for s in range(engine.n):
+        for s in range(engine.n):  # repro: allow[per-rank-loop] -- p2p match per peer
             if s not in got:
                 m = engine.transport.match_recv(ep, s, self.tag)
                 if m is not None:
                     got[s] = m.payload
         if len(got) < engine.n:
             return NOTHING
+        # repro: allow[per-rank-loop] -- per-peer result assembly
         return [got[s] for s in range(engine.n)]
 
 
@@ -308,7 +399,7 @@ class _ScatterWaitAllOp(_TransportOp):
             raise ValueError(
                 f"{self.kind} needs one chunk per rank "
                 f"({engine.n}), got {len(chunks)}")
-        for dst in range(engine.n):
+        for dst in range(engine.n):  # repro: allow[per-rank-loop] -- one real send per peer
             if dst != rank:
                 self._send(engine, ep, role, dst, chunks[dst], step)
         return (f"{self.kind}_wait", self._meta(op),
@@ -319,13 +410,14 @@ class _ScatterWaitAllOp(_TransportOp):
 
     def resolve(self, engine, ep, role, rank, pend):
         _, meta, got = pend
-        for s in range(engine.n):
+        for s in range(engine.n):  # repro: allow[per-rank-loop] -- p2p match per peer
             if s not in got:
                 m = engine.transport.match_recv(ep, s, self.tag)
                 if m is not None:
                     got[s] = m.payload
         if len(got) < engine.n:
             return NOTHING
+        # repro: allow[per-rank-loop] -- per-peer result assembly
         return self._finish(meta, [got[s] for s in range(engine.n)])
 
     def _finish(self, meta, parts):
@@ -361,20 +453,21 @@ class AllgatherOp(_TransportOp):
 
     def post(self, engine, ep, role, rank, op, step):
         _, value = op
-        for dst in range(engine.n):
+        for dst in range(engine.n):  # repro: allow[per-rank-loop] -- one real send per peer
             if dst != rank:
                 self._send(engine, ep, role, dst, value, step)
         return ("allgather_wait", None, {rank: structural_copy(value)})
 
     def resolve(self, engine, ep, role, rank, pend):
         _, _meta, got = pend
-        for s in range(engine.n):
+        for s in range(engine.n):  # repro: allow[per-rank-loop] -- p2p match per peer
             if s not in got:
                 m = engine.transport.match_recv(ep, s, self.tag)
                 if m is not None:
                     got[s] = m.payload
         if len(got) < engine.n:
             return NOTHING
+        # repro: allow[per-rank-loop] -- per-peer result assembly
         return [got[s] for s in range(engine.n)]
 
 
@@ -389,7 +482,7 @@ class ScanOp(_TransportOp):
 
     def post(self, engine, ep, role, rank, op, step):
         _, value, redop = op
-        for dst in range(rank + 1, engine.n):
+        for dst in range(rank + 1, engine.n):  # repro: allow[per-rank-loop] -- one real send per peer
             self._send(engine, ep, role, dst, value, step)
         return ("scan_wait", redop, {rank: structural_copy(value)})
 
@@ -488,14 +581,22 @@ class CollectiveEngine:
         for op in self.ops.values():
             for head in op.pending_heads():
                 self._pending_owners[head] = op
-        # switchboard state
-        self.contrib: Dict[tuple, Dict] = {}
+        # switchboard state: one SoA table per (kind, step, idx, …) key
+        self.tables: Dict[tuple, _SwitchTable] = {}
         self.combined: Dict[tuple, Any] = {}
         self._role_views: Dict[str, Tuple] = {}
-        # optional observability hook (repro.obs.ObsRecorder): mirrored
-        # every post() as on_collective(kind, role, rank, step, idx) with
-        # idx the endpoint's pre-post op_index — the same instance key
-        # the switchboard matches on.  None (default) costs one check.
+        self._view_masks: Dict[str, np.ndarray] = {}
+        self._view_keys: Dict[str, str] = {}
+        # batched resolution: keys of switchboard instances completed
+        # since the last drain.  The scheduler drains take_completions()
+        # after every switchboard post and wakes exactly those keys'
+        # parked waiters (posts into incomplete instances wake nobody).
+        self._completions: list = []
+        # optional observability hook (repro.obs.ObsRecorder): transport
+        # collectives mirror every post() as on_collective(kind, role,
+        # rank, step, idx) with idx the endpoint's pre-post op_index;
+        # switchboard instances instead emit one batch summary at
+        # completion (on_collective_batch).  None (default) is one check.
         self.obs = None
 
     # -- lifecycle ---------------------------------------------------------
@@ -504,9 +605,10 @@ class CollectiveEngine:
         """Collectives match within a step; drop the previous step's
         tables (keys carry the step index, so this is pure GC) and reset
         per-endpoint op counters."""
-        self.contrib.clear()
+        self.tables.clear()
         self.combined.clear()
         self._role_views.clear()
+        self._completions.clear()
         for ep in self.transport.endpoints.values():
             ep.op_index = 0
 
@@ -514,20 +616,122 @@ class CollectiveEngine:
         """Replica map mutated (promotion / drop / restart): role views and
         memoized combines are stale."""
         self._role_views.clear()
+        self._view_masks.clear()
+        self._view_keys.clear()
         self.combined.clear()
 
     def role_view(self, role: str) -> Tuple:
         """The §5 completion rule: which (role, rank) contributions form
-        this role's allreduce result."""
+        this role's allreduce result.  (Documentation/compat accessor —
+        the hot path uses the boolean-mask form, ``_needs_rep``.)"""
         view = self._role_views.get(role)
         if view is None:
             rmap = self.transport.rmap
-            view = tuple(
+            view = tuple(  # repro: allow[per-rank-loop] -- compat accessor, not the hot path
                 ("cmp", r) if role == "cmp" or rmap.rep[r] is None
                 else ("rep", r)
                 for r in range(self.n))
             self._role_views[role] = view
         return view
+
+    def _needs_rep(self, role: str) -> np.ndarray:
+        """``role_view`` as a boolean per-rank mask: True where the
+        role's result takes the replica contribution (rep view, rank has
+        a live replica).  Cached until the world changes."""
+        mask = self._view_masks.get(role)
+        if mask is None:
+            n = self.n
+            if role == "cmp":
+                mask = np.zeros(n, dtype=bool)
+            else:
+                rep = self.transport.rmap.rep
+                mask = np.fromiter((rep[r] is not None for r in range(n)),
+                                   dtype=bool, count=n)
+            self._view_masks[role] = mask
+        return mask
+
+    def view_key(self, role: str) -> str:
+        """O(1) memo key for a role's combine — replaces hashing an
+        N-tuple role view per resolve.  The rep view collapses to "cmp"
+        while no rank has a live replica (the two views then select
+        identical contributions)."""
+        vk = self._view_keys.get(role)
+        if vk is None:
+            vk = "rep" if role != "cmp" and bool(self._needs_rep(role).any()) \
+                else "cmp"
+            self._view_keys[role] = vk
+        return vk
+
+    # -- switchboard tables ------------------------------------------------
+
+    def intake(self, key: tuple, role: str, rank: int, value,
+               store: bool) -> None:
+        """Post one contribution into the instance's SoA table; the vote
+        that completes the union queues the key for the scheduler's
+        batched wake and emits the obs batch summary."""
+        table = self.tables.get(key)
+        if table is None:
+            table = self.tables[key] = _SwitchTable(self.n)
+        if table.post(role, rank, value, store):
+            self._completions.append(key)
+            if self.obs is not None:
+                cmask = table.masks.get("cmp")
+                rmask = table.masks.get("rep")
+                self.obs.on_collective_batch(
+                    key[0], key[1], key[2],
+                    np.nonzero(cmask)[0].tolist()
+                    if cmask is not None else (),
+                    int(rmask.sum()) if rmask is not None else 0)
+
+    def take_completions(self) -> list:
+        """Drain the completed-instance keys queued since the last call."""
+        if not self._completions:
+            return []
+        out = self._completions
+        self._completions = []
+        return out
+
+    def combine_table(self, table: _SwitchTable, role: str, redop: str):
+        """Materialize one role view's reduction from a completed table:
+        a vectorized row select between the rep and cmp stacks, then one
+        ``combine_stacked`` call (rank-ascending, bitwise-identical to
+        the old per-worker fold).  Falls back to the sequential
+        ``combine`` when a role holds object-path payloads or the two
+        roles' stacks disagree on shape/dtype."""
+        n = self.n
+        cmask = table.masks.get("cmp")
+        rmask = table.masks.get("rep")
+        if rmask is None:
+            take_rep = None
+        else:
+            have_cmp = cmask if cmask is not None \
+                else np.zeros(n, dtype=bool)
+            # the §5 view with promotion fallback in BOTH directions:
+            # the rep view takes each replicated rank's rep vote when it
+            # arrived (else the cmp twin's — same value by construction);
+            # the cmp view takes rep only where cmp never voted
+            take_rep = np.where(self._needs_rep(role), rmask, ~have_cmp)
+        stack_c = table.stacks.get("cmp")
+        stack_r = table.stacks.get("rep")
+        if table.objs.get("cmp") is None and table.objs.get("rep") is None:
+            if take_rep is None or not take_rep.any():
+                return combine_stacked(redop, stack_c)
+            if take_rep.all():
+                return combine_stacked(redop, stack_r)
+            if stack_c is not None and stack_r is not None \
+                    and stack_c.shape == stack_r.shape \
+                    and stack_c.dtype == stack_r.dtype:
+                sel = np.where(
+                    take_rep.reshape((n,) + (1,) * (stack_c.ndim - 1)),
+                    stack_r, stack_c)
+                return combine_stacked(redop, sel)
+        values = []
+        for r in range(n):                  # object-path slow fallback
+            src = "rep" if take_rep is not None and take_rep[r] else "cmp"
+            objs = table.objs.get(src)
+            values.append(objs[r] if objs is not None
+                          else table.stacks[src][r])
+        return combine(redop, values)
 
     # -- dispatch ----------------------------------------------------------
 
@@ -542,11 +746,16 @@ class CollectiveEngine:
         if handler is None:
             raise ValueError(f"unknown collective {op[0]!r}")
         role, rank = self.transport.role_of(ep)
-        if self.obs is not None:
-            # capture op_index BEFORE the handler advances it: this is
-            # the instance index the collective is keyed by
-            self.obs.on_collective(op[0], role, rank, step, ep.op_index)
-        return handler.post(self, ep, role, rank, op, step)
+        # capture op_index BEFORE the handler advances it: this is the
+        # instance index the collective is keyed by
+        idx = ep.op_index
+        pend = handler.post(self, ep, role, rank, op, step)
+        if self.obs is not None and pend[0] != "collective":
+            # transport collectives mirror per post; switchboard
+            # instances ("collective" head) report once, at completion
+            # (on_collective_batch via intake) — not 2N per-post calls
+            self.obs.on_collective(op[0], role, rank, step, idx)
+        return pend
 
     def resolve(self, ep: Endpoint, pend: tuple):
         head = pend[0]
@@ -567,22 +776,48 @@ class ReferenceCollectives:
     """Single-process collective matcher with straight-line semantics —
     the resolver repro.ft.SimAppWorkload runs its apps on. No roles, no
     replication, no messages: contributions keyed per (kind, instance),
-    results from ``reference_result``."""
+    results from ``reference_result``.
+
+    Allreduce intake shares the engine's SoA machinery: contributions go
+    into a single-role ``_SwitchTable`` and reduce through the same
+    ``combine_stacked`` kernel (memoized per instance) instead of a
+    per-rank dict plus one combine per resolver."""
 
     def __init__(self, n: int):
         self.n = n
         self.contrib: Dict[tuple, Dict[int, Any]] = {}
         self.meta: Dict[tuple, Any] = {}
-        self.op_index: Dict[int, int] = {r: 0 for r in range(n)}
+        # per-rank op-index cursors as one int array (not a dict)
+        self.op_index = np.zeros(n, dtype=np.int64)
+        self.tables: Dict[tuple, _SwitchTable] = {}
+        self._memo: Dict[tuple, Any] = {}
+
+    def begin_step(self) -> None:
+        """Optional per-step GC mirroring the engine: callers that key
+        instances per step may drop the previous step's tables."""
+        self.contrib.clear()
+        self.meta.clear()
+        self.tables.clear()
+        self._memo.clear()
+        self.op_index[:] = 0
 
     def post(self, rank: int, op: tuple) -> tuple:
         """Record rank's contribution; returns the pending descriptor."""
         kind = op[0]
-        idx = self.op_index[rank]
+        idx = int(self.op_index[rank])
         self.op_index[rank] = idx + 1
+        if kind == "allreduce":
+            _, value, redop = op
+            key = (kind, idx, redop)
+            table = self.tables.get(key)
+            if table is None:
+                table = self.tables[key] = _SwitchTable(self.n)
+            table.post("cmp", rank, value, store=True)
+            self.meta[key] = redop
+            return ("collective", key)
         if kind == "barrier":
             key, value, meta = (kind, idx), True, None
-        elif kind in ("allreduce", "reduce_scatter", "scan"):
+        elif kind in ("reduce_scatter", "scan"):
             _, value, redop = op
             key, meta = (kind, idx, redop), redop
         elif kind in ("bcast", "gather"):
@@ -604,6 +839,19 @@ class ReferenceCollectives:
 
     def resolve(self, rank: int, pend: tuple):
         _, key = pend
+        table = self.tables.get(key)
+        if table is not None:                # allreduce: SoA fast path
+            if not table.complete:
+                return NOTHING
+            out = self._memo.get(key)
+            if out is None:
+                stack = table.stacks.get("cmp")
+                if stack is not None:
+                    out = combine_stacked(self.meta[key], stack)
+                else:
+                    out = combine(self.meta[key], list(table.objs["cmp"]))
+                self._memo[key] = out
+            return out.copy() if isinstance(out, np.ndarray) else out
         votes = self.contrib.get(key, {})
         if len(votes) < self.n:
             return NOTHING

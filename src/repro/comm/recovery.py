@@ -58,7 +58,7 @@ class RecoveryManager:
         _role, rank = t.role_of(ep)
         have = {(m.src, m.dst, m.tag, m.send_id)
                 for m in ep.live_messages()}
-        n_replayed = 0
+        to_replay = []
         for _src_rank, log in t.send_logs.items():
             for m in log.replay_for(rank, ep.cursor.expected):
                 key = (m.src, m.dst, m.tag, m.send_id)
@@ -66,13 +66,16 @@ class RecoveryManager:
                     continue
                 # the logged message is immutable (frozen payload): it can
                 # be redelivered as-is, no defensive copy
-                t.deliver(ep, m)
-                n_replayed += 1
-                if self.price_replay and t.cost_model is not None:
-                    src_wid = t.rmap.cmp.get(m.src)
-                    if src_wid is not None:
-                        t._charge(src_wid, ep.wid,
-                                  payload_nbytes(m.payload), m.tag)
+                to_replay.append(m)
+        # one bulk admit + one waker call for the whole replay burst
+        t.deliver_bulk(ep, to_replay)
+        if self.price_replay and t.cost_model is not None:
+            for m in to_replay:
+                src_wid = t.rmap.cmp.get(m.src)
+                if src_wid is not None:
+                    t._charge(src_wid, ep.wid,
+                              payload_nbytes(m.payload), m.tag)
+        n_replayed = len(to_replay)
         self.replays += n_replayed
         return n_replayed
 

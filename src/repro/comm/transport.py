@@ -116,6 +116,16 @@ class Endpoint:
             t.popleft()
         t.append(cell)
 
+    def admit_bulk(self, msgs) -> int:
+        """Admit many messages in the given order (replay/rebuild): one
+        call amortizes the per-message index lookups.  Returns the count
+        admitted."""
+        count = 0
+        for m in msgs:
+            self.admit(m)
+            count += 1
+        return count
+
     def live_messages(self) -> List[LoggedMessage]:
         """Unconsumed messages in arrival order (drain/replay/tests)."""
         cells = [c for q in self.buckets.values() for c in q if c[2]]
@@ -128,8 +138,7 @@ class Endpoint:
         self.buckets = {}
         self.tag_index = {}
         self.arrival_seq = 0
-        for m in msgs:
-            self.admit(m)
+        self.admit_bulk(msgs)
 
     @property
     def inbox(self) -> List[LoggedMessage]:
@@ -248,6 +257,15 @@ class ReplicaTransport:
         self.activity += 1
         if self.waker is not None:
             self.waker(ep.wid)
+
+    def deliver_bulk(self, ep: Endpoint, msgs) -> None:
+        """Deliver many messages to one endpoint (log replay): a single
+        activity bump and ONE waker call instead of one per message."""
+        count = ep.admit_bulk(msgs)
+        if count:
+            self.activity += count
+            if self.waker is not None:
+                self.waker(ep.wid)
 
     def _charge(self, src_wid: int, dst_wid: int, nbytes: int,
                 tag: Optional[int] = None) -> None:

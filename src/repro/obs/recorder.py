@@ -16,9 +16,10 @@ and implements the hook protocols the seams already expose:
   * VirtualClock charge hook (``on_charge``; set by ``bind_clock``):
     every ledger charge becomes a labelled counter, and repair/restore
     charges feed the recovery-latency histogram;
-  * CollectiveEngine post hook (``on_collective``): per-instance counters
-    and per-rank instant spans keyed the way the engine keys matching —
-    (kind, step, op-index);
+  * CollectiveEngine hooks: transport collectives mirror every post
+    (``on_collective``); completed switchboard instances arrive as ONE
+    batch summary from the SoA arrival masks (``on_collective_batch``) —
+    both keyed the way the engine keys matching, (kind, step, op-index);
   * the runtime step hook (``on_step``): per-rank step/comm spans, the
     cheap ``complete()`` path.
 
@@ -130,12 +131,30 @@ class ObsRecorder:
 
     def on_collective(self, kind: str, role: str, rank: int, step: int,
                       idx: int) -> None:
+        """One transport-collective post (bcast/gather/…; the switchboard
+        reports per completed instance via ``on_collective_batch``)."""
         self.metrics.inc(f"collectives.posts.{kind}.{role}")
         tr = self.tracer
         if tr is not None and role == "cmp":
             # keyed the way the engine keys matching: (kind, step, idx)
             tr.instant(rank, kind, "collective",
                        step=step, idx=idx)
+
+    def on_collective_batch(self, kind: str, step: int, idx: int,
+                            cmp_ranks, n_rep: int) -> None:
+        """One COMPLETED switchboard instance, summarized from its SoA
+        arrival masks: the per-role post counters advance by the mask
+        counts in two ``inc`` calls (not 2N per-post calls), and the
+        trace gets one instant per computational rank."""
+        if cmp_ranks:
+            self.metrics.inc(f"collectives.posts.{kind}.cmp",
+                             len(cmp_ranks))
+        if n_rep:
+            self.metrics.inc(f"collectives.posts.{kind}.rep", n_rep)
+        tr = self.tracer
+        if tr is not None:
+            for rank in cmp_ranks:
+                tr.instant(rank, kind, "collective", step=step, idx=idx)
 
     # -- runtime step hook ---------------------------------------------------
 

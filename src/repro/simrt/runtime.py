@@ -569,9 +569,13 @@ class SimRuntime:
                     worker.pending = self._intake(worker, op)
                     if worker.pending is not None and \
                             worker.pending[0] == "collective":
-                        # this contribution may complete the collective
-                        # for workers already parked on it
-                        wake_collective(worker.pending[1])
+                        # batched resolution: the engine queues the keys
+                        # this post completed; wake exactly those keys'
+                        # parked waiters (a post into a still-incomplete
+                        # instance wakes nobody — workers only park
+                        # pre-completion, so no wakeup can be lost)
+                        for ckey in self.engine.take_completions():
+                            wake_collective(ckey)
                     nxt.add(w)
                 round_i += 1
                 # wakes fired while events/repairs run (replay deliveries)

@@ -199,6 +199,30 @@ def test_lint_deepcopy_on_comm_hot_path():
         path="src/repro/comm/payload.py") == []
 
 
+def test_lint_per_rank_loop_in_collectives():
+    src = ("def f(self):\n"
+           "    for r in range(self.n):\n"
+           "        pass\n")
+    fs = lint_source(src, path="src/repro/comm/collectives.py")
+    assert rules(fs) == {"per-rank-loop"}
+    # comprehensions and range(start, engine.n) forms count too
+    fs = lint_source("def f(e, r):\n"
+                     "    return [x for x in range(r + 1, e.n)]\n",
+                     path="src/repro/comm/collectives.py")
+    assert rules(fs) == {"per-rank-loop"}
+    # only the collective engine is policed; plain range(n) is fine
+    assert lint_source(src, path="src/repro/comm/transport.py") == []
+    assert lint_source("def f(n):\n    for r in range(n):\n        pass\n",
+                       path="src/repro/comm/collectives.py") == []
+    # genuine per-destination message loops annotate the escape hatch
+    assert lint_source(
+        "def f(self):\n"
+        "    # repro: allow[per-rank-loop]\n"
+        "    for dst in range(self.n):\n"
+        "        pass\n",
+        path="src/repro/comm/collectives.py") == []
+
+
 def test_lint_set_iteration_order():
     fs = lint_source("s = {1, 2}\nfor x in s:\n    pass\n")
     assert rules(fs) == {"set-order"}

@@ -1,0 +1,212 @@
+"""Property tests: SoA switchboard resolution == ReferenceCollectives,
+bitwise.
+
+The engine's structure-of-arrays message tables (docs/perf.md, "SoA
+collective tables") promise bitwise-identical allreduce/barrier results
+to the straight-line ``ReferenceCollectives`` — across redops
+(sum/min/max/prod) x dtypes (float32/float64/int64/bool) x world sizes x
+replication thresholds, including a mid-collective worker kill whose
+repair drains and replays transport traffic and promotes a replica.
+
+The sweep is a seeded deterministic property test (numpy SeedSequence
+payload generation per cell); when the ``hypothesis`` package is
+available an additional randomized-example test draws from the same
+space.  Bitwise means bitwise: results compare by dtype and by buffer
+bytes, not by np.allclose.
+"""
+import numpy as np
+import pytest
+
+from repro.comm.collectives import (ReferenceCollectives, combine,
+                                    combine_stacked)
+from repro.comm.transport import NOTHING
+from repro.configs.base import FTConfig
+from repro.core.failure_sim import FailureEvent
+from repro.simrt import CostModel, SimRuntime
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hyp_st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # container without hypothesis: the seeded
+    HAVE_HYPOTHESIS = False    # sweep below covers the same space
+
+REDOPS = ("sum", "min", "max", "prod")
+DTYPES = (np.float32, np.float64, np.int64, np.bool_)
+
+
+def payloads(n, steps, dtype, shape=(5,), seed=0):
+    """Deterministic per-(rank, step) contributions, dtype-ranged so prod
+    stays representable and bool gets a real mix of True/False."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, n, steps]))
+    out = {}
+    for t in range(steps):
+        for r in range(n):
+            if dtype is np.bool_:
+                v = rng.integers(0, 2, size=shape).astype(np.bool_)
+            elif np.issubdtype(dtype, np.integer):
+                v = rng.integers(1, 5, size=shape).astype(dtype)
+            else:
+                v = (rng.uniform(0.5, 2.0, size=shape)).astype(dtype)
+            out[(t, r)] = v
+    return out
+
+
+def reference_allreduce(n, vecs, redop):
+    """One instance through ReferenceCollectives; returns per-rank out."""
+    ref = ReferenceCollectives(n)
+    pends = {r: ref.post(r, ("allreduce", vecs[r], redop))
+             for r in range(n)}
+    outs = {r: ref.resolve(r, pends[r]) for r in range(n)}
+    assert all(o is not NOTHING for o in outs.values())
+    return outs
+
+
+class AllreduceProbe:
+    """Per step: one allreduce + one bcast (real p2p traffic so a kill
+    has messages to drain/replay) + one barrier; every allreduce result
+    folds into the rank state for the bitwise comparison."""
+
+    def __init__(self, n_ranks, pay, redop, steps):
+        self.n_ranks = n_ranks
+        self.pay = pay
+        self.redop = redop
+        self.steps = steps
+
+    def init_state(self, rank):
+        return {"outs": []}
+
+    def step(self, rank, state, t):
+        out = yield ("allreduce", self.pay[(t, rank)], self.redop)
+        root = t % self.n_ranks
+        b = yield ("bcast", self.pay[(t, root)], root)
+        yield ("barrier",)
+        state["outs"].append((out, b))
+        return state
+
+    def check(self, states):
+        tot = 0.0
+        for s in states.values():
+            for out, b in s["outs"]:
+                tot += float(np.sum(np.asarray(out, dtype=np.float64)))
+                tot += float(np.sum(np.asarray(b, dtype=np.float64)))
+        return tot
+
+
+def run_probe(n, redop, dtype, rep=1.0, mode="replication", steps=2,
+              events=(), seed=0):
+    pay = payloads(n, steps, dtype, seed=seed)
+    app = AllreduceProbe(n, pay, redop, steps)
+    ft = FTConfig(mode=mode, replication_degree=rep, mtbf_s=1e9,
+                  ckpt_interval_s=100.0)
+    rt = SimRuntime(app, ft,
+                    costs=CostModel(step_time_s=1.0, ckpt_cost_s=0.1,
+                                    restore_cost_s=0.1),
+                    failure_events=list(events), workers_per_node=2)
+    rt.run(steps)
+    # final cmp states, straight off the workers (promotions included)
+    states = {r: rt.workers[rt.rmap.cmp[r]].state for r in range(rt.n)}
+    return pay, states
+
+
+def assert_bitwise(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.dtype == b.dtype, (a.dtype, b.dtype)
+    assert a.shape == b.shape
+    assert a.tobytes() == b.tobytes()
+
+
+def check_against_reference(n, redop, dtype, pay, states, steps):
+    for t in range(steps):
+        vecs = {r: pay[(t, r)] for r in range(n)}
+        expect = reference_allreduce(n, vecs, redop)
+        for r in range(n):
+            got, _b = states[r]["outs"][t]
+            assert_bitwise(got, expect[r])
+
+
+@pytest.mark.parametrize("redop", REDOPS)
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: np.dtype(d).name)
+@pytest.mark.parametrize("n,rep", [(1, 1.0), (2, 1.0), (5, 0.5),
+                                   (8, 1.0)])
+def test_soa_matches_reference(redop, dtype, n, rep):
+    steps = 2
+    pay, states = run_probe(n, redop, dtype, rep=rep, steps=steps)
+    check_against_reference(n, redop, dtype, pay, states, steps)
+
+
+@pytest.mark.parametrize("redop", ("sum", "prod"))
+@pytest.mark.parametrize("dtype", (np.float64, np.int64),
+                         ids=lambda d: np.dtype(d).name)
+@pytest.mark.parametrize("rep", (0.5, 1.0))
+def test_soa_matches_reference_under_kill(redop, dtype, rep):
+    """Kill a worker mid-collective: drain + replay + promotion must
+    leave every surviving rank's allreduce history bitwise-identical to
+    the failure-free reference."""
+    n, steps = 5, 4
+    ev = [FailureEvent(1.5, (2,))]
+    pay, states = run_probe(n, redop, dtype, rep=rep, steps=steps,
+                            events=ev)
+    check_against_reference(n, redop, dtype, pay, states, steps)
+
+
+def test_mixed_payload_demotes_to_object_path():
+    """Ranks disagreeing on shape/dtype (scalar vs vector, f32 vs f64)
+    must demote the stacked buffer to the object path and still match
+    the reference's sequential fold bitwise."""
+    n, steps = 4, 1
+    mixed = {
+        (0, 0): np.float64(2.0),
+        (0, 1): np.arange(3, dtype=np.float64) + 1.0,
+        (0, 2): np.arange(3, dtype=np.float32) + 2.0,
+        (0, 3): 0.5,
+    }
+    app = AllreduceProbe(n, mixed, "sum", steps)
+    ft = FTConfig(mode="replication", replication_degree=1.0, mtbf_s=1e9)
+    rt = SimRuntime(app, ft,
+                    costs=CostModel(step_time_s=1.0, ckpt_cost_s=0.1,
+                                    restore_cost_s=0.1),
+                    workers_per_node=2)
+    rt.run(steps)
+    expect = reference_allreduce(n, {r: mixed[(0, r)] for r in range(n)},
+                                 "sum")
+    for r in range(n):
+        got, _b = rt.workers[rt.rmap.cmp[r]].state["outs"][0]
+        assert_bitwise(got, expect[r])
+
+
+def test_combine_stacked_is_the_shared_kernel():
+    """combine() and the engine both reduce through combine_stacked; the
+    stacked reduce is bitwise == the sequential fold for ndim >= 1."""
+    rng = np.random.default_rng(7)
+    for redop in REDOPS:
+        vals = [rng.uniform(0.5, 2.0, size=(6,)).astype(np.float64)
+                for _ in range(9)]
+        seq = vals[0]
+        for v in vals[1:]:
+            ufunc = {"sum": np.add, "min": np.minimum,
+                     "max": np.maximum, "prod": np.multiply}[redop]
+            seq = ufunc(seq, v) if redop != "sum" else seq + v
+        assert_bitwise(combine(redop, vals), seq)
+        assert_bitwise(combine_stacked(redop, np.stack(vals)), seq)
+
+
+def test_combine_stacked_rejects_unknown_redop():
+    with pytest.raises(ValueError):
+        combine_stacked("xor", np.zeros((2, 3)))
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_soa_matches_reference_hypothesis():
+    @settings(max_examples=25, deadline=None)
+    @given(redop=hyp_st.sampled_from(REDOPS),
+           dtype=hyp_st.sampled_from(DTYPES),
+           n=hyp_st.integers(min_value=1, max_value=6),
+           rep=hyp_st.sampled_from([0.5, 1.0]),
+           seed=hyp_st.integers(min_value=0, max_value=2 ** 16))
+    def prop(redop, dtype, n, rep, seed):
+        pay, states = run_probe(n, redop, dtype, rep=rep, steps=1,
+                                seed=seed)
+        check_against_reference(n, redop, dtype, pay, states, 1)
+
+    prop()

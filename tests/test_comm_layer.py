@@ -272,7 +272,7 @@ def test_wildcard_forwarding_with_promotion():
 def test_combine_matches_sequential_fold():
     rng = np.random.default_rng(0)
     for redop, fold in (("sum", np.add), ("max", np.maximum),
-                        ("min", np.minimum)):
+                        ("min", np.minimum), ("prod", np.multiply)):
         for shape in SHAPES:
             vals = [rng.standard_normal(shape) for _ in range(6)]
             want = vals[0]
@@ -280,7 +280,7 @@ def test_combine_matches_sequential_fold():
                 want = fold(want, v) if redop != "sum" else want + v
             np.testing.assert_array_equal(combine(redop, vals), want)
     with pytest.raises(ValueError):
-        combine("prod", [1.0, 2.0])
+        combine("xor", [1.0, 2.0])
 
 
 def test_reference_result_semantics():
